@@ -1,0 +1,45 @@
+"""§3.4 statistical-bound validation: Eq. 9/10/11 vs the empirical
+scheduler over a density sweep on uniform matrices — the bound must
+upper-bound the empirical colors and track its shape."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.bounds import expected_colors_bound, expected_utilization
+from repro.core.scheduler import schedule
+from repro.data.matrices import synth_uniform
+
+from .common import write_csv
+
+
+def run(n: int = 2048, l: int = 128, quiet: bool = False) -> Dict:
+    rows: List[List] = []
+    ok = True
+    for p in (1e-3, 3e-3, 1e-2, 3e-2, 1e-1):
+        coo = synth_uniform(n, p, seed=0)
+        sched = schedule(coo, l, load_balance=False, method="exact")
+        mean_c = sched.total_colors / sched.num_windows
+        bound_c = expected_colors_bound(n, p, l)
+        util_emp = sched.hardware_utilization
+        util_bound = expected_utilization(n, p, l)
+        # Eq. 9 relies on the CLT with the paper's own precondition
+        # N > 9(1-p)/p, i.e. ~>= 10 expected NZ per row
+        clt_valid = n * p >= 10
+        if clt_valid:
+            ok &= mean_c <= bound_c * 1.05
+        rows.append([f"{p:g}", f"{mean_c:.1f}", f"{bound_c:.1f}",
+                     f"{util_emp:.4f}", f"{util_bound:.4f}", clt_valid])
+    path = write_csv(
+        "bound_validation.csv",
+        ["density", "empirical_colors", "eq9_bound", "empirical_util",
+         "eq11_util", "clt_valid"],
+        rows,
+    )
+    if not quiet:
+        print(f"# Eq.9/11 validation (n={n}, l={l}) -> {path}")
+        for r in rows:
+            print(f"  p={r[0]:>6s}: colors {r[1]:>7s} <= bound {r[2]:>7s}; "
+                  f"util {r[3]} vs bound {r[4]}")
+        print(f"  bound dominates empirical (CLT regime): {ok}")
+    return {"ok": ok}

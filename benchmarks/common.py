@@ -1,0 +1,63 @@
+"""Shared benchmark utilities: matrix suites, design sweeps, CSV output."""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Iterable, List, Tuple
+
+import numpy as np
+
+from repro.core.baselines import all_designs
+from repro.core.formats import COOMatrix
+from repro.core.hardware_model import (
+    GUST_87,
+    GUST_256,
+    SYSTOLIC_1D_256,
+    execution_seconds,
+    gust_energy_joules,
+    systolic_1d_energy_joules,
+)
+from repro.core.scheduler import schedule
+from repro.data.matrices import (
+    REAL_WORLD_SUITE,
+    make_real_world_surrogate,
+    synth_k_regular,
+    synth_power_law,
+    synth_uniform,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def geomean(xs: Iterable[float]) -> float:
+    xs = [x for x in xs if x > 0]
+    return float(np.exp(np.mean(np.log(xs)))) if xs else 0.0
+
+
+def real_world_matrices(scale: float, seed: int = 0) -> List[Tuple[str, COOMatrix]]:
+    """Structure-matched surrogates of the paper's Table 3 suite (offline
+    container; DESIGN.md §6)."""
+    return [
+        (spec.name, make_real_world_surrogate(spec, scale=scale, seed=seed))
+        for spec in REAL_WORLD_SUITE
+    ]
+
+
+def synthetic_matrices(n: int, densities, seed: int = 0):
+    out = []
+    for d in densities:
+        out.append((f"uniform_{d:g}", "uniform", synth_uniform(n, d, seed)))
+        out.append((f"powerlaw_{d:g}", "power_law", synth_power_law(n, d, seed=seed)))
+        out.append((f"kregular_{d:g}", "k_regular", synth_k_regular(n, d, seed)))
+    return out
+
+
+def write_csv(name: str, header: List[str], rows: List[List]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for row in rows:
+            f.write(",".join(str(x) for x in row) + "\n")
+    return path

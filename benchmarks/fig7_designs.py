@@ -1,0 +1,39 @@
+"""Fig. 7(a/b): hardware utilization and execution time of every design
+(1D, AT, Flex-TPU, Fafnir, GUST naive/EC/EC+LB) over the real-world
+matrix suite.  Headline reproduction target: GUST EC/LB geomean
+utilization ~= 33.67% (paper §1) with 1D/AT ~0.08% and Fafnir ~4.67%."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from .common import all_designs, geomean, real_world_matrices, write_csv
+
+DESIGNS = ["1d", "adder_tree", "flex_tpu", "fafnir", "gust_naive",
+           "gust_ec", "gust_ec_lb"]
+
+
+def run(scale: float = 0.04, l: int = 256, quiet: bool = False) -> Dict:
+    rows: List[List] = []
+    utils: Dict[str, List[float]] = {d: [] for d in DESIGNS}
+    for name, coo in real_world_matrices(scale):
+        t0 = time.time()
+        reports = all_designs(coo, l)
+        dt = time.time() - t0
+        for d in DESIGNS:
+            r = reports[d]
+            utils[d].append(r.utilization)
+            rows.append([name, coo.nnz, f"{coo.density:.2e}", d,
+                         f"{r.cycles:.0f}", f"{r.utilization:.6f}", f"{dt:.2f}"])
+    summary = {d: geomean(utils[d]) for d in DESIGNS}
+    path = write_csv(
+        "fig7_designs.csv",
+        ["matrix", "nnz", "density", "design", "cycles", "utilization", "wall_s"],
+        rows,
+    )
+    if not quiet:
+        print(f"# Fig7 (scale={scale}, l={l}) -> {path}")
+        for d in DESIGNS:
+            print(f"  geomean utilization {d:12s} = {summary[d]*100:7.3f}%")
+    return {"summary": summary, "rows": rows}

@@ -1,0 +1,89 @@
+"""§Roofline report: aggregate the dry-run JSONs (results/dryrun/) into
+the per-(arch × shape × mesh) roofline table — three terms in seconds,
+dominant bottleneck, MODEL_FLOPS / HLO_FLOPs ratio — and emit the
+markdown table EXPERIMENTS.md embeds."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs.base import SHAPES, get_arch
+from repro.launch.hlo_analysis import HW
+
+from .common import RESULTS_DIR, write_csv
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def model_flops(arch_id: str, shape_name: str) -> float:
+    """MODEL_FLOPS per §Roofline: 6·N·D (dense) or 6·N_active·D (MoE) for
+    train; 2·N(_active)·D for inference shapes (forward only)."""
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    # parameter count (approximate, embedding included once)
+    d, L, f, V = cfg.d_model, cfg.n_layers, cfg.d_ff, cfg.padded_vocab
+    dh, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    attn = d * (H + 2 * KV) * dh + H * dh * d
+    if cfg.n_experts:
+        ffn_active = 3 * d * f * cfg.top_k
+        ffn_total = 3 * d * f * cfg.n_experts
+    else:
+        ffn_active = ffn_total = 3 * d * f
+    if not f:  # xLSTM: internal projections
+        di = cfg.mlstm_expand * d
+        ffn_active = ffn_total = 0
+        attn = 2 * d * di + 3 * di * di + di * d  # rough per-block
+    n_active = L * (attn + ffn_active) + V * d
+    mult = 6.0 if shape.kind == "train" else 2.0
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    return mult * n_active * tokens
+
+
+def load_cells() -> List[Dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def run(quiet: bool = False) -> Dict:
+    cells = load_cells()
+    rows = []
+    md = ["| arch | shape | mesh | compute s | memory s | collective s | "
+          "dominant | peak GiB | MODEL/HLO |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("skipped") or not c.get("ok") or c.get("gust"):
+            continue
+        chips = 512 if c["mesh"] == "multi" else 256
+        rl = c["roofline"]
+        mf = model_flops(c["arch"], c["shape"]) / chips
+        ratio = mf / max(c["hlo"]["dot_flops"], 1.0)
+        peak = c["memory"]["peak_bytes"] / 2**30
+        rows.append([
+            c["arch"], c["shape"], c["mesh"],
+            f"{rl['compute_s']:.4f}", f"{rl['memory_s']:.4f}",
+            f"{rl['collective_s']:.4f}", rl["dominant"],
+            f"{peak:.1f}", f"{ratio:.3f}",
+        ])
+        md.append("| " + " | ".join(str(x) for x in rows[-1]) + " |")
+    path = write_csv(
+        "roofline.csv",
+        ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+         "dominant", "peak_GiB", "model_over_hlo_flops"],
+        rows,
+    )
+    md_path = os.path.join(RESULTS_DIR, "roofline.md")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(md_path, "w") as f:
+        f.write("\n".join(md) + "\n")
+    if not quiet:
+        print(f"# Roofline -> {path} ({len(rows)} cells)")
+        doms = {}
+        for r in rows:
+            doms[r[6]] = doms.get(r[6], 0) + 1
+        print("  dominant-term distribution:", doms)
+    return {"n_cells": len(rows)}

@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+report.  ``python -m benchmarks.run [--full] [--only fig7,...]``.
+
+Default (quick) mode scales the Table-3 surrogate suite to 4% of the
+published dimensions so the full harness finishes in minutes on one CPU
+core; ``--full`` uses larger surrogates (same structure, same scheduler).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="", help="comma list: fig7,fig8,fig9,"
+                    "table4,bound,roofline")
+    args = ap.parse_args(argv)
+    scale = 0.12 if args.full else 0.04
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (bound_validation, fig7_designs, fig8_speedup_energy,
+                   fig9_bandwidth, roofline_report, table4_serpens)
+
+    jobs = [
+        ("fig7", lambda: fig7_designs.run(scale=scale)),
+        ("fig8", lambda: fig8_speedup_energy.run(scale=scale)),
+        ("fig9", lambda: fig9_bandwidth.run(scale=scale)),
+        ("table4", lambda: table4_serpens.run(scale=scale)),
+        ("bound", lambda: bound_validation.run()),
+        ("roofline", lambda: roofline_report.run()),
+    ]
+    rc = 0
+    for name, fn in jobs:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[bench:{name}] done in {time.time()-t0:.1f}s\n")
+        except Exception as e:  # keep the harness going
+            print(f"[bench:{name}] FAILED: {type(e).__name__}: {e}\n")
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

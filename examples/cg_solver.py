@@ -1,0 +1,70 @@
+"""Conjugate-gradient solver on the GUST scheduled format — the paper's
+§5.3 amortization argument end-to-end: schedule ONCE, run hundreds of
+SpMVs against changing vectors inside an iterative solver.
+
+    PYTHONPATH=src python examples/cg_solver.py
+"""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import coo_from_dense
+from repro.core.scheduler import schedule
+from repro.kernels.ops import gust_spmm, pack_schedule
+
+
+def make_spd(n: int, density: float, seed: int = 0) -> np.ndarray:
+    """Sparse symmetric positive-definite system (paper: Ax=y solvers)."""
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, n)) < density / 2) * rng.standard_normal((n, n))
+    a = (a + a.T).astype(np.float32)
+    a[np.arange(n), np.arange(n)] = np.abs(a).sum(1) + 1.0  # diag dominance
+    return a
+
+
+def main():
+    n = 512
+    a_dense = make_spd(n, 0.05)
+    b = np.random.default_rng(1).standard_normal(n).astype(np.float32)
+
+    # preprocessing: one schedule, reused by every iteration
+    t0 = time.time()
+    sched = schedule(coo_from_dense(a_dense), l=64, load_balance=True)
+    packed = pack_schedule(sched)
+    pre_s = time.time() - t0
+    print(f"schedule: {pre_s:.2f}s ({sched.cycles} modeled cycles/SpMV, "
+          f"util={sched.hardware_utilization:.1%})")
+
+    matvec = jax.jit(lambda v: gust_spmm(packed, v[:, None], use_kernel=False)[:, 0])
+
+    # conjugate gradient
+    x = jnp.zeros(n)
+    r = jnp.asarray(b) - matvec(x)
+    p = r
+    rs = float(r @ r)
+    t0 = time.time()
+    for it in range(200):
+        ap = matvec(p)
+        alpha = rs / float(p @ ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = float(r @ r)
+        if it % 25 == 0:
+            print(f"  iter {it:3d} residual {np.sqrt(rs_new):.3e}")
+        if np.sqrt(rs_new) < 1e-5:
+            print(f"  converged at iter {it}")
+            break
+        p = r + (rs_new / rs) * p
+        rs = rs_new
+    solve_s = time.time() - t0
+    err = np.abs(a_dense @ np.asarray(x) - b).max()
+    print(f"solve: {solve_s:.2f}s, |Ax-b|_inf = {err:.2e}")
+    print(f"amortization: 1 preprocessing ({pre_s:.2f}s) served "
+          f"{it+1} SpMVs (paper §5.3: schedule once, solve many)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Config registry: one module per assigned architecture + paper configs."""
+
+from .base import ArchConfig, ShapeConfig, SHAPES, get_arch, list_archs, ARCH_IDS

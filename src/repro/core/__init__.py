@@ -1,0 +1,29 @@
+"""GUST core: edge-coloring scheduler, scheduled SpMV, dataflow models."""
+
+from .formats import COOMatrix, GustSchedule, coo_from_dense, dense_from_coo
+from .scheduler import schedule
+from .spmv import spmv, spmv_scheduled, spmm_scheduled, distributed_spmv
+from .bounds import (
+    expected_colors_bound,
+    expected_execution_cycles,
+    expected_utilization,
+)
+from .gust_linear import GustLinear, SparsityConfig, prune_by_magnitude
+
+__all__ = [
+    "COOMatrix",
+    "GustSchedule",
+    "coo_from_dense",
+    "dense_from_coo",
+    "schedule",
+    "spmv",
+    "spmv_scheduled",
+    "spmm_scheduled",
+    "distributed_spmv",
+    "expected_colors_bound",
+    "expected_execution_cycles",
+    "expected_utilization",
+    "GustLinear",
+    "SparsityConfig",
+    "prune_by_magnitude",
+]

@@ -1,0 +1,97 @@
+"""GustLinear — the paper's technique as a first-class LM feature.
+
+Decode-time LM inference is matvec-dominated: every projection computes
+``W @ x`` for a handful of activation vectors.  ``GustLinear`` stores a
+magnitude-pruned weight matrix in the GUST scheduled format (schedule
+computed once, at weight-load time — paper §3.3/§5.3 amortization) and
+executes the matvec through the GUST path (pure-jnp or the Pallas kernel).
+
+Training and prefill stay dense (the paper defers SpMM to future work);
+this module is wired into ``serving/`` via ``ArchConfig.sparsity``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import COOMatrix
+from .scheduler import schedule
+from .spmv import spmm_scheduled
+
+__all__ = ["SparsityConfig", "GustLinear", "prune_by_magnitude"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Serving-time weight-sparsity knobs (off by default)."""
+
+    enable: bool = False
+    density: float = 0.1  # fraction of weights kept after magnitude pruning
+    gust_length: int = 256
+    load_balance: bool = True
+    method: str = "fast"  # edge-coloring method
+    use_kernel: bool = False  # route through the Pallas kernel
+
+
+def prune_by_magnitude(w: np.ndarray, density: float) -> np.ndarray:
+    """Keep the largest-|w| entries at the requested density."""
+    if not 0.0 < density <= 1.0:
+        raise ValueError("density must be in (0, 1]")
+    k = max(int(round(w.size * density)), 1)
+    thresh = np.partition(np.abs(w).ravel(), w.size - k)[w.size - k]
+    out = np.where(np.abs(w) >= thresh, w, 0.0)
+    return out
+
+
+class GustLinear:
+    """y = W_sparse @ x with W in GUST scheduled format.
+
+    Not a pytree — this is a *serving* artifact built once from trained
+    weights (analogous to a compiled engine).  ``__call__`` takes
+    ``x: (B, n)`` and returns ``(B, m)``.
+    """
+
+    def __init__(self, w: np.ndarray, cfg: SparsityConfig):
+        if w.ndim != 2:
+            raise ValueError("GustLinear expects a 2-D weight matrix")
+        self.cfg = cfg
+        self.shape = w.shape
+        w_pruned = prune_by_magnitude(np.asarray(w, np.float32), cfg.density)
+        rows, cols = np.nonzero(w_pruned)
+        coo = COOMatrix(
+            w.shape,
+            rows.astype(np.int64),
+            cols.astype(np.int64),
+            w_pruned[rows, cols].astype(np.float32),
+        )
+        self.nnz = coo.nnz
+        self.sched = schedule(
+            coo, cfg.gust_length, load_balance=cfg.load_balance, method=cfg.method
+        )
+
+    @property
+    def cycles(self) -> int:
+        return self.sched.cycles
+
+    @property
+    def hardware_utilization(self) -> float:
+        return self.sched.hardware_utilization
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        if x.ndim == 1:
+            x = x[None, :]
+            squeeze = True
+        else:
+            squeeze = False
+        if self.cfg.use_kernel:
+            from repro.kernels import ops as kops
+
+            y = kops.gust_spmm(self.sched, x.T).T
+        else:
+            y = spmm_scheduled(self.sched, x.T).T
+        return y[0] if squeeze else y

@@ -1,0 +1,381 @@
+"""Bipartite-graph edge-coloring scheduler (paper §3.3, Listings 1-2).
+
+Per window (set of ``l`` consecutive scheduled rows) we build a bipartite
+multigraph: left vertices = window rows (adders), right vertices = lanes
+(multipliers, column mod ``l`` after load balancing), one edge per nonzero.
+A proper edge coloring — no two edges sharing a vertex get the same color —
+is exactly a collision-free schedule: color = time slot, so no multiplier
+consumes two elements in one cycle and no adder receives two partial
+products in one cycle.
+
+Three colorers are provided:
+
+  * ``method="paper"`` — the exact greedy of Listing 1: per color, iterate
+    left vertices in order, each takes its first remaining edge whose lane
+    is unused in the current matching.  Pure Python; used for tests and
+    small matrices.
+  * ``method="fast"``  — vectorized equivalent: per color round, every
+    unmatched row *proposes* its first eligible edge; lane conflicts are
+    resolved by row priority; losers re-propose until the matching is
+    maximal.  Produces a valid coloring with the same greedy-maximal-
+    matching structure, at numpy speed across all windows simultaneously.
+  * ``method="exact"`` — optimal Δ-coloring (König) via degree-padding +
+    Euler-split recursion.  Beyond-paper option (§Perf); guarantees
+    C_w == max-degree, the Eq. 1 lower bound.
+
+All three satisfy: validity, completeness, C_w >= Δ_w (Eq. 1 bound).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .formats import COOMatrix, GustSchedule
+from .load_balance import balance_lanes, balance_rows
+
+__all__ = ["schedule", "color_edges_fast", "color_edges_paper", "color_edges_exact"]
+
+
+# ---------------------------------------------------------------------------
+# Edge construction
+# ---------------------------------------------------------------------------
+
+
+def _build_edges(
+    coo: COOMatrix, l: int, load_balance: bool
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Returns (win, row_local, lane, col, val, row_perm) sorted by
+    (win, row_local, col) — the LIL order Listing 1 consumes."""
+    m, n = coo.shape
+    if load_balance:
+        row_perm, new_rows = balance_rows(coo)
+    else:
+        row_perm = np.arange(m, dtype=np.int64)
+        new_rows = coo.rows.astype(np.int64)
+
+    win = new_rows // l
+    row_local = new_rows - win * l
+    if load_balance:
+        lane = balance_lanes(win, coo.cols, l, n)
+    else:
+        lane = (coo.cols % l).astype(np.int64)
+
+    order = np.lexsort((coo.cols, row_local, win))
+    return (
+        win[order],
+        row_local[order],
+        lane[order],
+        coo.cols[order].astype(np.int64),
+        coo.vals[order],
+        row_perm,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Colorers
+# ---------------------------------------------------------------------------
+
+
+def color_edges_paper(row_key: np.ndarray, lane_key: np.ndarray) -> np.ndarray:
+    """Listing 1, exact semantics.  ``row_key``/``lane_key`` are globally
+    unique per window (caller offsets by window).  Edges must be sorted by
+    (row_key, intra-row order).  Returns per-edge colors."""
+    e = row_key.shape[0]
+    colors = np.full(e, -1, dtype=np.int64)
+    # Per-row edge lists (indices into the edge arrays).
+    rows, row_starts = np.unique(row_key, return_index=True)
+    row_edges = {}
+    bounds = np.append(row_starts, e)
+    for i, r in enumerate(rows):
+        row_edges[int(r)] = list(range(bounds[i], bounds[i + 1]))
+    clr = 0
+    while row_edges:
+        matching = set()
+        done_rows = []
+        for r in sorted(row_edges):  # iterate left vertices in order
+            edges = row_edges[r]
+            for pos, eidx in enumerate(edges):
+                lk = int(lane_key[eidx])
+                if lk not in matching:
+                    colors[eidx] = clr
+                    matching.add(lk)
+                    edges.pop(pos)
+                    break  # paper's break: one edge per row per color
+            if not edges:
+                done_rows.append(r)
+        for r in done_rows:
+            del row_edges[r]
+        clr += 1
+    return colors
+
+
+def color_edges_fast(row_key: np.ndarray, lane_key: np.ndarray) -> np.ndarray:
+    """Vectorized greedy maximal-matching coloring (see module docstring).
+    Edges must be sorted by (row_key, intra-row order); keys globally
+    unique per window."""
+    e = row_key.shape[0]
+    colors = np.full(e, -1, dtype=np.int64)
+    if e == 0:
+        return colors
+    n_rows = int(row_key.max()) + 1
+    n_lanes = int(lane_key.max()) + 1
+    alive_idx = np.arange(e, dtype=np.int64)  # sorted by (row, order)
+    clr = 0
+    while alive_idx.size:
+        lane_busy = np.zeros(n_lanes, dtype=bool)
+        row_done = np.zeros(n_rows, dtype=bool)
+        cand = alive_idx
+        while cand.size:
+            elig = cand[~row_done[row_key[cand]] & ~lane_busy[lane_key[cand]]]
+            if elig.size == 0:
+                break
+            # First eligible edge per row (edges are row-order sorted).
+            _, first = np.unique(row_key[elig], return_index=True)
+            proposals = elig[first]
+            # Lane conflicts: lower row wins (proposals are row-ascending).
+            _, keep = np.unique(lane_key[proposals], return_index=True)
+            winners = proposals[keep]
+            colors[winners] = clr
+            lane_busy[lane_key[winners]] = True
+            row_done[row_key[winners]] = True
+            if winners.size == proposals.size:
+                # every proposing row matched; remaining rows had no
+                # eligible edge at proposal time -> re-scan survivors once
+                cand = elig if elig.size > winners.size else np.empty(0, np.int64)
+            else:
+                cand = elig  # losers re-propose against updated busy sets
+        alive_idx = alive_idx[colors[alive_idx] < 0]
+        clr += 1
+    return colors
+
+
+def _euler_split(row_key: np.ndarray, lane_key: np.ndarray) -> np.ndarray:
+    """Split a bipartite multigraph with all even degrees into two halves of
+    equal degree by 2-coloring edges along Eulerian circuits.  Returns a
+    0/1 label per edge."""
+    e = row_key.shape[0]
+    label = np.empty(e, dtype=np.int8)
+    # adjacency: node -> list of (edge, other)  (bipartite: offset lanes)
+    n_rows = int(row_key.max()) + 1 if e else 0
+    lanes_off = lane_key + n_rows
+    n_nodes = int(lanes_off.max()) + 1 if e else 0
+    adj_head = np.full(n_nodes, -1, dtype=np.int64)
+    nxt = np.empty(2 * e, dtype=np.int64)
+    ends = np.empty(2 * e, dtype=np.int64)  # node at the far end of half-edge
+    eid = np.empty(2 * e, dtype=np.int64)
+    for k in range(e):  # build linked adjacency (both directions)
+        for half, (a, b) in enumerate(((row_key[k], lanes_off[k]), (lanes_off[k], row_key[k]))):
+            h = 2 * k + half
+            nxt[h] = adj_head[a]
+            adj_head[a] = h
+            ends[h] = b
+            eid[h] = k
+    used = np.zeros(e, dtype=bool)
+    for start in range(n_nodes):
+        while adj_head[start] != -1 and used[eid[adj_head[start]]]:
+            adj_head[start] = nxt[adj_head[start]]
+        if adj_head[start] == -1:
+            continue
+        node, parity = start, 0
+        while True:
+            h = adj_head[node]
+            while h != -1 and used[eid[h]]:
+                h = nxt[h]
+            adj_head[node] = h
+            if h == -1:
+                break
+            k = eid[h]
+            used[k] = True
+            label[k] = parity
+            parity ^= 1
+            node = ends[h]
+    return label
+
+
+def _perfect_matching_regular(
+    row_key: np.ndarray, lane_key: np.ndarray, n: int
+) -> np.ndarray:
+    """Perfect matching of a d-regular bipartite multigraph with ``n`` nodes
+    per side (exists by Hall's theorem).  Hopcroft-Karp.  Returns the edge
+    index matched to each left node, shape (n,)."""
+    order = np.argsort(row_key, kind="stable")
+    starts = np.searchsorted(row_key[order], np.arange(n + 1))
+    INF = 1 << 60
+    match_l = np.full(n, -1, dtype=np.int64)  # left  -> edge idx
+    match_r = np.full(n, -1, dtype=np.int64)  # right -> left node
+    while True:
+        # BFS layers over free left nodes.
+        dist = np.full(n, INF, dtype=np.int64)
+        queue = [u for u in range(n) if match_l[u] == -1]
+        for u in queue:
+            dist[u] = 0
+        found = False
+        qi = 0
+        while qi < len(queue):
+            u = queue[qi]
+            qi += 1
+            for ei in order[starts[u] : starts[u + 1]]:
+                w = match_r[lane_key[ei]]
+                if w == -1:
+                    found = True
+                elif dist[w] == INF:
+                    dist[w] = dist[u] + 1
+                    queue.append(w)
+        if not found:
+            break
+
+        def dfs(u: int) -> bool:
+            for ei in order[starts[u] : starts[u + 1]]:
+                v = lane_key[ei]
+                w = match_r[v]
+                if w == -1 or (dist[w] == dist[u] + 1 and dfs(w)):
+                    match_l[u] = ei
+                    match_r[v] = u
+                    return True
+            dist[u] = INF
+            return False
+
+        for u in range(n):
+            if match_l[u] == -1:
+                dfs(u)
+    if (match_l < 0).any():
+        raise AssertionError("regular bipartite graph must have a perfect matching")
+    return match_l
+
+
+def color_edges_exact(row_key: np.ndarray, lane_key: np.ndarray) -> np.ndarray:
+    """Optimal Δ-edge-coloring of the bipartite multigraph (König theorem:
+    chromatic index of a bipartite multigraph equals its max degree Δ).
+
+    Classical scheme: Δ-regularize with dummy edges, then peel — if the
+    current regular degree d is odd, extract a perfect matching (one color)
+    and recurse on d-1; if even, Euler-split into two d/2-regular halves.
+    Real edges receive exactly Δ colors."""
+    e = row_key.shape[0]
+    if e == 0:
+        return np.empty(0, dtype=np.int64)
+    n_rows = int(row_key.max()) + 1
+    n_lanes = int(lane_key.max()) + 1
+    n = max(n_rows, n_lanes)
+    deg_r = np.bincount(row_key, minlength=n)
+    deg_l = np.bincount(lane_key, minlength=n)
+    delta = int(max(deg_r.max(), deg_l.max()))
+    # Δ-regularize: both sides have n nodes, so stub counts match exactly.
+    pad_r = np.repeat(np.arange(n, dtype=np.int64), delta - deg_r)
+    pad_l = np.repeat(np.arange(n, dtype=np.int64), delta - deg_l)
+    assert pad_r.size == pad_l.size == n * delta - e
+    rk = np.concatenate([row_key.astype(np.int64), pad_r])
+    lk = np.concatenate([lane_key.astype(np.int64), pad_l])
+    total = rk.shape[0]
+    colors = np.full(total, -1, dtype=np.int64)
+    next_color = [0]
+
+    def rec(idx: np.ndarray, d: int):
+        if idx.size == 0 or d == 0:
+            return
+        if d == 1:
+            colors[idx] = next_color[0]
+            next_color[0] += 1
+            return
+        if d % 2 == 1:
+            sub_match = _perfect_matching_regular(rk[idx], lk[idx], n)
+            colors[idx[sub_match]] = next_color[0]
+            next_color[0] += 1
+            keep = np.ones(idx.size, dtype=bool)
+            keep[sub_match] = False
+            rec(idx[keep], d - 1)
+        else:
+            lab = _euler_split(rk[idx], lk[idx])
+            rec(idx[lab == 0], d // 2)
+            rec(idx[lab == 1], d // 2)
+
+    rec(np.arange(total, dtype=np.int64), delta)
+    out = colors[:e]
+    assert out.min() >= 0 and out.max() < delta
+    return out
+
+
+_COLORERS = {
+    "paper": color_edges_paper,
+    "fast": color_edges_fast,
+    "exact": color_edges_exact,
+}
+
+
+# ---------------------------------------------------------------------------
+# Full scheduling pipeline (Listing 1 + Listing 2)
+# ---------------------------------------------------------------------------
+
+
+def schedule(
+    coo: COOMatrix,
+    l: int,
+    *,
+    load_balance: bool = True,
+    method: str = "fast",
+    value_dtype=np.float32,
+) -> GustSchedule:
+    """Preprocess a sparse matrix into the GUST scheduled format."""
+    if method not in _COLORERS:
+        raise ValueError(f"unknown coloring method {method!r}")
+    m, n = coo.shape
+    num_windows = max(-(-m // l), 1)
+
+    win, row_local, lane, col, val, row_perm = _build_edges(coo, l, load_balance)
+    e = win.shape[0]
+
+    if e:
+        if method == "exact":
+            # Per-window exact coloring (windows are independent graphs).
+            colors = np.empty(e, dtype=np.int64)
+            w_ids, w_starts = np.unique(win, return_index=True)
+            bounds = np.append(w_starts, e)
+            for i in range(w_ids.shape[0]):
+                s, t = bounds[i], bounds[i + 1]
+                colors[s:t] = color_edges_exact(row_local[s:t], lane[s:t])
+        else:
+            # Globalized keys let one pass color every window at once.
+            row_key = win * l + row_local
+            lane_key = win * l + lane
+            colors = _COLORERS[method](row_key, lane_key)
+    else:
+        colors = np.empty(0, dtype=np.int64)
+
+    # Colors per window -> global cycle offsets.
+    colors_per_window = np.zeros(num_windows, dtype=np.int64)
+    if e:
+        np.maximum.at(colors_per_window, win, colors + 1)
+    window_starts = np.zeros(num_windows + 1, dtype=np.int64)
+    np.cumsum(colors_per_window, out=window_starts[1:])
+    c_total = int(window_starts[-1])
+
+    # Listing 2: materialize M_sch / Row_sch / Col_sch.
+    m_sch = np.zeros((max(c_total, 1), l), dtype=value_dtype)
+    row_sch = np.zeros((max(c_total, 1), l), dtype=np.int32)
+    # Padding slots gather v[lane] and multiply by 0 — always safe: the
+    # execution paths zero-pad v to ceil(n/l)*l (jnp.take clamps when not),
+    # and col==lane preserves the lane structure the fused kernel needs.
+    col_sch = np.tile(np.arange(l, dtype=np.int32), (max(c_total, 1), 1))
+    valid = np.zeros((max(c_total, 1), l), dtype=bool)
+    if e:
+        gcycle = window_starts[win] + colors
+        if valid[gcycle, lane].any() or np.unique(gcycle * l + lane).size != e:
+            raise AssertionError("collision in schedule — invalid coloring")
+        m_sch[gcycle, lane] = val.astype(value_dtype)
+        row_sch[gcycle, lane] = row_local.astype(np.int32)
+        col_sch[gcycle, lane] = col.astype(np.int32)
+        valid[gcycle, lane] = True
+
+    return GustSchedule(
+        l=l,
+        shape=(m, n),
+        nnz=e,
+        m_sch=m_sch,
+        row_sch=row_sch,
+        col_sch=col_sch,
+        window_starts=window_starts,
+        row_perm=row_perm,
+        valid=valid,
+    )

@@ -1,0 +1,178 @@
+"""GUST SpMV execution (JAX).
+
+The scheduled format turns SpMV into three dense streaming steps — exactly
+the paper's three hardware levels:
+
+  1. multiply   : ``P = M_sch * v[Col_sch]``          (the l multipliers)
+  2. route      : partial product (c, j) goes to adder ``Row_sch[c, j]``
+                  of its window                        (the crossbar)
+  3. accumulate : adders integrate per window, dump at window end.
+
+Pure-jnp implementations live here (also serving as the kernel oracle);
+``repro.kernels.ops`` provides the Pallas path that fuses 1-3 on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import COOMatrix, GustSchedule
+
+__all__ = [
+    "spmv_dense_ref",
+    "spmv_scheduled",
+    "spmv",
+    "spmm_scheduled",
+    "distributed_spmv",
+]
+
+
+def spmv_dense_ref(dense: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: plain dense matvec."""
+    return dense @ v
+
+
+def _window_ids(sched: GustSchedule) -> np.ndarray:
+    """Window id of each global schedule cycle, shape (C_total,)."""
+    c_total = max(sched.total_colors, 1)
+    wid = np.zeros(c_total, dtype=np.int32)
+    ws = sched.window_starts
+    for w in range(sched.num_windows):
+        wid[ws[w] : ws[w + 1]] = w
+    return wid
+
+
+@functools.partial(jax.jit, static_argnames=("m", "l", "num_windows"))
+def _spmv_scheduled_impl(
+    m_sch: jnp.ndarray,
+    row_sch: jnp.ndarray,
+    col_sch: jnp.ndarray,
+    window_of_cycle: jnp.ndarray,
+    row_perm: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    m: int,
+    l: int,
+    num_windows: int,
+) -> jnp.ndarray:
+    # Level 1: the multipliers.  Buffer Filler == gather by Col_sch.
+    v_sch = jnp.take(v, col_sch, axis=0, mode="clip")  # (C_total, l)
+    partial = m_sch.astype(jnp.float32) * v_sch.astype(jnp.float32)
+    # Levels 2+3: crossbar route + accumulate.  Global adder id is
+    # window*l + row_sch; windows never share adders, so one segment-sum
+    # implements every window's accumulate/dump.
+    adder = window_of_cycle[:, None] * l + row_sch  # (C_total, l)
+    y_sorted = jax.ops.segment_sum(
+        partial.reshape(-1), adder.reshape(-1), num_segments=num_windows * l
+    )
+    # Undo the load-balancing row sort: scheduled row s is original row
+    # row_perm[s].
+    return jnp.zeros((m,), jnp.float32).at[row_perm].set(y_sorted[:m])
+
+
+def spmv_scheduled(sched: GustSchedule, v: jnp.ndarray) -> jnp.ndarray:
+    """SpMV from the scheduled format (pure jnp; oracle for the kernel)."""
+    m, n = sched.shape
+    if v.shape != (n,):
+        raise ValueError(f"vector shape {v.shape} != ({n},)")
+    return _spmv_scheduled_impl(
+        jnp.asarray(sched.m_sch),
+        jnp.asarray(sched.row_sch),
+        jnp.asarray(sched.col_sch),
+        jnp.asarray(_window_ids(sched)),
+        jnp.asarray(sched.row_perm),
+        v,
+        m=m,
+        l=sched.l,
+        num_windows=sched.num_windows,
+    )
+
+
+def spmm_scheduled(sched: GustSchedule, x: jnp.ndarray) -> jnp.ndarray:
+    """Multi-vector SpMV: ``x`` is (n, B) -> (m, B).  This is the decode-
+    batch path of :class:`~repro.core.gust_linear.GustLinear` (B independent
+    GUST passes sharing one schedule — paper §3.3: the schedule is reused
+    for any vector)."""
+    m, n = sched.shape
+    if x.ndim != 2 or x.shape[0] != n:
+        raise ValueError(f"expected (n={n}, B), got {x.shape}")
+    return jax.vmap(lambda col: spmv_scheduled(sched, col), in_axes=1, out_axes=1)(x)
+
+
+def spmv(
+    coo: COOMatrix,
+    v: jnp.ndarray,
+    l: int = 256,
+    *,
+    load_balance: bool = True,
+    method: str = "fast",
+) -> jnp.ndarray:
+    """Convenience: schedule + execute in one call (schedule not cached)."""
+    from .scheduler import schedule
+
+    return spmv_scheduled(schedule(coo, l, load_balance=load_balance, method=method), v)
+
+
+# ---------------------------------------------------------------------------
+# Distributed SpMV — the paper's §5.5 "k parallel length-l GUSTs".
+# ---------------------------------------------------------------------------
+
+
+def distributed_spmv(
+    sched: GustSchedule,
+    v: jnp.ndarray,
+    mesh: jax.sharding.Mesh,
+    axis: str = "data",
+):
+    """Shard row-windows across ``axis`` (each device runs an independent
+    length-l GUST over its windows; the schedule is untouched — paper:
+    "the Edge-Coloring schedule would not need to change").  The vector is
+    replicated; outputs concatenate without collectives because windows own
+    disjoint output rows.
+
+    Windows are padded to a multiple of the axis size with empty windows
+    (C_w = 0 contributes zero cycles on real hardware; here zero slots)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    n_dev = mesh.shape[axis]
+    m, n = sched.shape
+    l, W = sched.l, sched.num_windows
+    cpw = np.diff(sched.window_starts)
+    c_max = int(cpw.max()) if W else 1
+    W_pad = -(-W // n_dev) * n_dev
+
+    # Re-pack the ragged per-window schedule into (W_pad, c_max, l) blocks.
+    def pack(arr, fill):
+        out = np.full((W_pad, max(c_max, 1)) + arr.shape[1:], fill, arr.dtype)
+        for w in range(W):
+            s, t = sched.window_starts[w], sched.window_starts[w + 1]
+            out[w, : t - s] = arr[s:t]
+        return out
+
+    m_b = pack(sched.m_sch, 0.0)
+    r_b = pack(sched.row_sch, 0)
+    c_b = pack(sched.col_sch, 0)
+
+    def local(m_blk, r_blk, c_blk, vec):
+        # (W_loc, c_max, l) -> per-window segment sum -> (W_loc * l,)
+        p = m_blk.astype(jnp.float32) * jnp.take(vec, c_blk, axis=0, mode="clip")
+        w_loc = m_blk.shape[0]
+        adder = jnp.arange(w_loc, dtype=jnp.int32)[:, None, None] * l + r_blk
+        return jax.ops.segment_sum(p.reshape(-1), adder.reshape(-1), num_segments=w_loc * l)
+
+    spec_in = P(axis)  # shard leading window dim
+    fn = jax.jit(
+        jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(spec_in, spec_in, spec_in, P()),
+            out_specs=spec_in,
+        )
+    )
+    y_sorted = fn(jnp.asarray(m_b), jnp.asarray(r_b), jnp.asarray(c_b), v)[: m]
+    return jnp.zeros((m,), jnp.float32).at[jnp.asarray(sched.row_perm)].set(y_sorted[:m])

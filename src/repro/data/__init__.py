@@ -1,0 +1,2 @@
+from .matrices import synth_uniform, synth_power_law, synth_k_regular, REAL_WORLD_SUITE
+from .pipeline import TokenPipeline, PipelineConfig

@@ -1,0 +1,1 @@
+"""Distribution layer: named-sharding rules + collective helpers."""

@@ -1,0 +1,382 @@
+"""Named-sharding rules: DP / FSDP / TP / EP / SP per architecture & shape.
+
+The mesh is ``(data, model)`` single-pod or ``(pod, data, model)``
+multi-pod (launch/mesh.py).  Axis roles:
+
+  * batch          -> ("pod", "data")   (pure DP)
+  * parameters     -> 2-D sharded: a TP dim over "model" plus an FSDP dim
+                      over "data" wherever divisibility allows — this is
+                      what lets 123B-parameter trains and 109B-parameter
+                      MoE serving fit 5.8 GB/chip HBM.
+  * attention TP   -> query/output heads over "model" *when the head
+                      count divides the axis*; otherwise attention weights
+                      fall back to FSDP-only and the block's TP comes from
+                      the FFN (recorded per-arch in DESIGN.md §7).
+  * MoE            -> experts over "model" (EP); token dispatch becomes
+                      all-to-all under GSPMD.
+  * KV cache       -> batch over DP axes; sequence dim over "model" for
+                      global layers (flash-decode style: XLA inserts the
+                      partial-softmax all-reduces).
+  * SP             -> long-context activations shard the sequence dim over
+                      "model" (constrain_activation with seq_sharded=True).
+
+Everything is expressed through two entry points:
+
+  ``param_specs(params, arch, mesh, mode)``  -> pytree of NamedSharding
+  ``constrain_activation(x, kind)``          -> with_sharding_constraint
+                                                (no-op outside a mesh ctx)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "mesh_axis_names",
+    "dp_axes",
+    "tp_axis",
+    "param_specs",
+    "batch_specs",
+    "cache_spec_overrides",
+    "activation_ctx",
+    "constrain_activation",
+]
+
+
+def mesh_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel axes: ("pod", "data") if multi-pod else ("data",)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh: Mesh) -> str:
+    return "model"
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding
+# ---------------------------------------------------------------------------
+
+
+def _divis(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _leaf_spec(path: str, shape, tp: int, fsdp: int, mode: str) -> P:
+    """PartitionSpec for one parameter leaf.  ``path`` is the '/'-joined key
+    path; divisibility decides whether a dim actually takes an axis."""
+    nd = len(shape)
+    spec = [None] * nd
+    name = path.rsplit("/", 1)[-1]
+
+    def take(dim: int, axis: str, size: int) -> bool:
+        if spec[dim] is None and _divis(shape[dim], size):
+            spec[dim] = axis
+            return True
+        return False
+
+    def fsdp_any(exclude=()):
+        # FSDP: shard the largest remaining dim over "data"
+        n_elems = 1
+        for s_ in shape:
+            n_elems *= s_
+        if mode != "train" and n_elems * 4 < (1 << 22):
+            return  # small serving weights stay replicated over data
+        for dim in sorted(range(nd), key=lambda i: -shape[i]):
+            if dim not in exclude and take(dim, "data", fsdp):
+                return
+
+    if nd == 1:
+        return P(None)
+
+    if name == "table":  # embedding (V, d)
+        # vocab over model only: FSDP on d would shard the unembed
+        # contraction and force logits partial-sum all-reduces over "data"
+        take(0, "model", tp)
+    elif name == "wq" and nd == 3:  # (d, H, dh): Megatron column-parallel
+        take(1, "model", tp)  # needs H % tp == 0 (else FSDP fallback)
+        fsdp_any(exclude=(1,))
+    elif name in ("wk", "wv") and nd == 3:  # (d, KV, dh)
+        take(1, "model", tp)  # dh-TP would break RoPE pairing: skip
+        fsdp_any(exclude=(1,))
+    elif name == "wo" and nd == 3:  # (H, dh, d): row-parallel
+        take(0, "model", tp)
+        fsdp_any(exclude=(0,))
+    elif name in ("w_gate", "w_up") and nd == 3:  # MoE (E, d, f)
+        take(0, "model", tp)  # EP
+        fsdp_any(exclude=(0,))
+    elif name == "w_down" and nd == 3:  # MoE (E, f, d)
+        take(0, "model", tp)
+        fsdp_any(exclude=(0,))
+    elif name in ("w_gate", "w_up", "w_up_gate") and nd == 2:  # (d, f)
+        take(1, "model", tp)
+        fsdp_any(exclude=(1,))
+    elif name == "w_down" and nd == 2:  # (f, d)
+        take(0, "model", tp)
+        fsdp_any(exclude=(0,))
+    elif name == "router":  # (d, E) — replicated over model (tiny)
+        fsdp_any()
+    elif name in ("w_x", "w_gate_branch"):  # RG-LRU in-projections (d, w)
+        take(1, "model", tp)
+        fsdp_any(exclude=(1,))
+    elif name in ("w_rgate", "w_igate"):  # (w, w)
+        take(1, "model", tp)
+        fsdp_any(exclude=(1,))
+    elif name == "w_out":  # (w, d)
+        take(0, "model", tp)
+        fsdp_any(exclude=(0,))
+    elif name in ("w_up", "w_ogate") and nd == 2:  # mLSTM (d, di)
+        take(1, "model", tp)
+        fsdp_any(exclude=(1,))
+    elif name in ("wq", "wk", "wv") and nd == 2:  # mLSTM (di, di)
+        take(1, "model", tp)
+        fsdp_any(exclude=(1,))
+    elif name == "w_if":  # (di, 2h)
+        fsdp_any()
+    elif name == "w_in" and nd == 3:  # sLSTM (d, 4, d)
+        take(2, "model", tp)
+        fsdp_any(exclude=(2,))
+    elif name == "r" and nd == 4:  # sLSTM recurrent (4, h, dh, dh)
+        take(1, "model", tp)
+    elif name == "conv":  # (W, width)
+        take(1, "model", tp)
+    else:
+        fsdp_any()
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params, mesh: Mesh, mode: str = "train"):
+    """Pytree of NamedSharding matching ``params`` (works on
+    ShapeDtypeStructs too — used by the dry-run)."""
+    tp = mesh.shape.get("model", 1)
+    fsdp = mesh.shape.get("data", 1)
+
+    def spec_of(path, leaf):
+        # stacked layers add a leading reps dim — strip it for rule matching
+        shape = leaf.shape
+        ps = _path_str(path)
+        stacked = "/reps/" in f"/{ps}/" or re.search(r"(^|/)reps(/|$)", ps)
+        if stacked and len(shape) >= 2:
+            inner = _leaf_spec(ps, shape[1:], tp, fsdp, mode)
+            return NamedSharding(mesh, P(None, *inner))
+        return NamedSharding(mesh, _leaf_spec(ps, shape, tp, fsdp, mode))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache sharding
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(mesh: Mesh, *, seq_sharded: bool = False):
+    """NamedSharding for (B, S[, d]) batch inputs: batch over DP axes,
+    optionally sequence over "model" (SP for long-context shapes)."""
+    dp = dp_axes(mesh)
+    seq = "model" if seq_sharded else None
+    return NamedSharding(mesh, P(dp, seq))
+
+
+def cache_spec_overrides(mesh: Mesh, batch: int):
+    """Sharding for KV-cache leaves (B, c, KV, dh) and recurrent states:
+    batch over DP where divisible, cache sequence dim over "model"."""
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    bspec = dp if batch % max(dp_size, 1) == 0 else None
+
+    def spec_of(path, leaf):
+        nd = len(leaf.shape)
+        ps = _path_str(path)
+        name = ps.rsplit("/", 1)[-1]
+        if name == "pos":
+            return NamedSharding(mesh, P())
+        # structure-first: cache leaves are (B, ...) for tail blocks and
+        # (R, B, ...) for the stacked rep caches
+        stacked = "/reps/" in f"/{ps}/"
+        b_dim = 1 if stacked else 0
+        if nd <= b_dim or leaf.shape[b_dim] != batch:
+            return NamedSharding(mesh, P(*([None] * nd)))
+        spec = [None] * nd
+        spec[b_dim] = bspec
+        if name in ("k", "v", "ck", "cv") and nd >= b_dim + 4:
+            # (.., B, c, KV, dh): shard the cache length over model
+            c_len = leaf.shape[b_dim + 1]
+            if c_len % mesh.shape.get("model", 1) == 0:
+                spec[b_dim + 1] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return spec_of
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (contextvar so model code stays mesh-agnostic)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _ActCtx:
+    mesh: Mesh
+    seq_sharded: bool = False
+
+
+_ACTIVE: Optional[_ActCtx] = None
+
+
+@contextlib.contextmanager
+def activation_ctx(mesh: Mesh, *, seq_sharded: bool = False):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = _ActCtx(mesh, seq_sharded)
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def constrain_attn(x: jnp.ndarray, head_dim: int, seq_dim: int) -> jnp.ndarray:
+    """Shard dim 0 over DP and either the head dim (TP, preferred) or the
+    query-sequence dim (context/sequence parallelism fallback when the
+    head count does not divide the model axis — e.g. gemma3's H=8 on a
+    16-way axis) over "model".  Used on attention-internal tensors and
+    scan carries, whose sharding GSPMD will not otherwise infer — without
+    this the blocked-attention backward replicates (B, H, S, T)-sized
+    buffers over the model axis."""
+    ctx = _ACTIVE
+    if ctx is None:
+        return x
+    dp = dp_axes(ctx.mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= ctx.mesh.shape[a]
+    tp = ctx.mesh.shape.get("model", 1)
+    spec = [None] * x.ndim
+    if x.shape[0] % max(dp_size, 1) == 0:
+        spec[0] = dp
+    if x.shape[head_dim] % tp == 0:
+        spec[head_dim] = "model"
+    elif x.shape[seq_dim] % tp == 0:
+        spec[seq_dim] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec))
+    )
+
+
+def constrain_kv_cache(x: jnp.ndarray) -> jnp.ndarray:
+    """Pin a (B, c, KV, dh) cache tensor to its canonical layout: batch
+    over DP, cache length over "model".  Applied inside decode/prefill so
+    GSPMD never round-trips the cache through another layout (without it
+    the partitioner falls back to replicating the full 88-layer stack —
+    'involuntary full rematerialization')."""
+    ctx = _ACTIVE
+    if ctx is None or x.ndim != 4:
+        return x
+    dp = dp_axes(ctx.mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= ctx.mesh.shape[a]
+    tp = ctx.mesh.shape.get("model", 1)
+    spec = [None] * 4
+    if x.shape[0] % max(dp_size, 1) == 0:
+        spec[0] = dp
+    if x.shape[1] % tp == 0:
+        spec[1] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def constrain_ep(x: jnp.ndarray) -> jnp.ndarray:
+    """Expert-parallel layout for MoE grouped buffers (E, C, ...): experts
+    over "model", capacity over DP when divisible.  Without this the
+    (E, C, d) dispatch buffer replicates on every chip."""
+    ctx = _ACTIVE
+    if ctx is None:
+        return x
+    dp = dp_axes(ctx.mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= ctx.mesh.shape[a]
+    tp = ctx.mesh.shape.get("model", 1)
+    spec = [None] * x.ndim
+    if x.shape[0] % tp == 0:
+        spec[0] = "model"
+    if x.ndim >= 2 and x.shape[1] % max(dp_size, 1) == 0:
+        spec[1] = dp
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def constrain_activation(x: jnp.ndarray, kind: str = "btd") -> jnp.ndarray:
+    """Annotate an activation.  kind: 'btd' residual stream, 'btv' logits,
+    'btd_save' remat-saved carry (sequence-sharded storage: the layer scan
+    gathers it back at block entry, so compute stays batch-sharded while
+    the 88-layer saved-carry footprint shrinks by the model-axis size),
+    'btd_gather' forced batch-only layout.  No-op outside an
+    activation_ctx."""
+    ctx = _ACTIVE
+    if ctx is None:
+        return x
+    if kind == "btd_save":
+        if not ctx.seq_sharded:
+            kind = "btd"
+        else:
+            dp = dp_axes(ctx.mesh)
+            dp_size = 1
+            for a in dp:
+                dp_size *= ctx.mesh.shape[a]
+            tp = ctx.mesh.shape.get("model", 1)
+            bspec = dp if x.shape[0] % max(dp_size, 1) == 0 else None
+            seq = "model" if x.ndim >= 2 and x.shape[1] % tp == 0 else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(ctx.mesh, P(bspec, seq, None))
+            )
+    if kind == "btd_gather":
+        dp = dp_axes(ctx.mesh)
+        dp_size = 1
+        for a in dp:
+            dp_size *= ctx.mesh.shape[a]
+        bspec = dp if x.shape[0] % max(dp_size, 1) == 0 else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(ctx.mesh, P(bspec, None, None))
+        )
+    dp = dp_axes(ctx.mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= ctx.mesh.shape[a]
+    b = x.shape[0]
+    bspec = dp if b % max(dp_size, 1) == 0 else None
+    seq = None
+    if ctx.seq_sharded and x.ndim >= 2 and x.shape[1] % ctx.mesh.shape.get("model", 1) == 0:
+        seq = "model"
+    if kind == "btd" and x.ndim == 3:
+        spec = P(bspec, seq, None)
+    elif kind == "btv" and x.ndim == 3:
+        vshard = x.shape[2] % ctx.mesh.shape.get("model", 1) == 0
+        # an axis can appear once per spec: vocab sharding wins over SP
+        spec = P(bspec, None if vshard else seq, "model" if vshard else None)
+    elif x.ndim >= 1:
+        spec = P(*([bspec] + [None] * (x.ndim - 1)))
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

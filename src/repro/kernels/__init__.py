@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the GUST hot path (validated via interpret=True).
+
+  gust_spmv.py   -- flagship: fused gather + one-hot MXU routing SpMV
+  gather_fill.py -- standalone Buffer-Filler vector gather
+  ops.py         -- jit'd public wrappers + packed-format utilities
+  ref.py         -- pure-jnp oracles (same block semantics, no Pallas)
+"""
+
+from .ops import PackedSchedule, pack_schedule, packed_spec, gust_spmm

@@ -1,0 +1,82 @@
+"""Buffer-Filler vector-gather Pallas kernel.
+
+The paper's Buffer Filler holds the input vector on-chip and fills each
+multiplier's vector FIFO with ``v[Col_sch[c, j]]`` (§3.3, "Streaming the
+Inputs").  This kernel is the standalone TPU analogue: the vector sits
+resident in VMEM in segment-major layout and the scheduled column indices
+stream through, producing the gathered vector stream ``V_sch``.
+
+It exists as its own kernel for two reasons: (a) it lets the gather logic
+be tested/swept independently of the routing matmul, and (b) it is the
+building block for the *unfused* execution path (gather kernel -> XLA
+elementwise/segment ops), which is the honest TPU analogue of GUST's
+hardware pipeline stages when fusion is disabled.
+
+Gather mechanism (same as the flagship kernel): the scheduler only ever
+maps a column to its own lane (``off == lane``) or — after load-balance
+step 3 — to the lane-reversed slot (``off == l-1-lane``), so the gather
+decomposes into a one-hot over the ``S = ceil(n/l)`` column segments plus
+a straight/flipped select.  No random access is ever issued.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["make_gather_fill"]
+
+
+def _kernel(col_ref, xs_ref, xf_ref, out_ref, *, l, seg_count, c_blk, b):
+    col_blk = col_ref[...].astype(jnp.int32)  # (C_blk, l) int
+    xs = xs_ref[...].astype(jnp.float32)  # (S, l, B)
+    xf = xf_ref[...].astype(jnp.float32)  # (S, l, B)
+
+    seg = col_blk // l
+    off = col_blk - seg * l
+    lane = jax.lax.broadcasted_iota(jnp.int32, (c_blk, l), 1)
+    flip = (off != lane).astype(jnp.float32)
+
+    seg_t = seg.T  # (l, C_blk)
+    onehot = (
+        seg_t[:, :, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (l, c_blk, seg_count), 2)
+    ).astype(jnp.float32)
+    dnums = (((2,), (0,)), ((0,), (1,)))
+    g_s = jax.lax.dot_general(onehot, xs, dnums, preferred_element_type=jnp.float32)
+    g_f = jax.lax.dot_general(onehot, xf, dnums, preferred_element_type=jnp.float32)
+    fsel = flip.T[:, :, None]
+    out = g_s * (1.0 - fsel) + g_f * fsel  # (l, C_blk, B)
+    out_ref[...] = out.transpose(1, 0, 2)  # (C_blk, l, B)
+
+
+def make_gather_fill(
+    total_rows: int,
+    l: int,
+    seg_count: int,
+    b: int,
+    *,
+    c_blk: int = 8,
+    interpret: bool = True,
+):
+    """pallas_call producing ``V_sch`` of shape (total_rows, l, B) from
+    ``Col_sch`` (total_rows, l) and the VMEM-resident vector."""
+    if total_rows % c_blk:
+        raise ValueError("total_rows must be a multiple of c_blk")
+    grid = (total_rows // c_blk,)
+    kernel = functools.partial(_kernel, l=l, seg_count=seg_count, c_blk=c_blk, b=b)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c_blk, l), lambda i: (i, 0)),
+            pl.BlockSpec((seg_count, l, b), lambda i: (0, 0, 0)),
+            pl.BlockSpec((seg_count, l, b), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((c_blk, l, b), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((total_rows, l, b), jnp.float32),
+        interpret=interpret,
+    )

@@ -1,0 +1,146 @@
+"""Flagship Pallas TPU kernel: windowed scheduled GUST SpMV.
+
+TPU adaptation of the paper's three hardware levels (DESIGN.md §2):
+
+  multipliers  -> VPU elementwise multiply of the scheduled value block
+                  with the gathered vector block;
+  Buffer Filler-> the vector lives resident in VMEM; the per-slot gather
+                  ``v[Col_sch]`` is fused in-kernel as a *segment one-hot
+                  contraction* (the scheduler only ever assigns a column to
+                  its own lane or the lane-reversed position — load-balance
+                  step 3 — so a one-hot over the ``n/l`` column segments
+                  plus a straight/flipped select reconstructs the gather
+                  without random access);
+  crossbar +   -> a one-hot routing matmul on the MXU:
+  adders          ``y_win += OneHot(Row_sch_blk)^T @ P_flat``.
+                  Collision-freedom of the edge coloring is what makes this
+                  exact — within a cycle each adder (output row) receives at
+                  most one partial product, so the one-hot rows never
+                  overlap within a cycle and the matmul loses nothing.
+
+Grid: ``(num_windows, num_color_blocks)``; dimension 1 is a reduction —
+the output window tile initializes at the first color block and
+accumulates across the rest, which is the Pallas analogue of the adders'
+integrate-then-dump (the "dump signal" is the final grid step).
+
+The scheduled stream (``m/col/row`` blocks) is what flows HBM->VMEM, tile
+by tile, double-buffered by the Pallas pipeline — exactly the paper's
+two-step Buffer Filler pipeline.  The dense vector/activation ``x`` is
+resident in VMEM for the whole call (the paper: "GUST stores the whole
+input vector as the first step").
+
+All arithmetic accumulates in f32 regardless of input dtype (MXU-native).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["make_gust_spmv"]
+
+
+def _kernel(m_ref, col_ref, row_ref, xs_ref, xf_ref, y_ref, *, l, seg_count, c_blk, b):
+    cb = pl.program_id(1)
+
+    m_blk = m_ref[...].astype(jnp.float32)  # (C_blk, l)
+    col_blk = col_ref[...].astype(jnp.int32)  # (C_blk, l) int
+    row_blk = row_ref[...].astype(jnp.int32)  # (C_blk, l) int
+    xs = xs_ref[...].astype(jnp.float32)  # (S, l, B) straight layout
+    xf = xf_ref[...].astype(jnp.float32)  # (S, l, B) lane-reversed layout
+
+    # ---- Buffer Filler: fused vector gather -----------------------------
+    seg = col_blk // l  # (C_blk, l)
+    off = col_blk - seg * l
+    lane = jax.lax.broadcasted_iota(jnp.int32, (c_blk, l), 1)
+    flip = (off != lane).astype(jnp.float32)  # 1.0 where lane-reversed
+
+    # One-hot over column segments, contracted per lane (lane is a batch
+    # dim): g[j, c, b] = Σ_s [seg[c,j]==s] · x[s, j, b].
+    seg_t = seg.T  # (l, C_blk)
+    onehot = (
+        seg_t[:, :, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (l, c_blk, seg_count), 2)
+    ).astype(jnp.float32)  # (l, C_blk, S)
+    dnums = (((2,), (0,)), ((0,), (1,)))  # contract S; batch over lane j
+    g_straight = jax.lax.dot_general(
+        onehot, xs, dnums, preferred_element_type=jnp.float32
+    )  # (l, C_blk, B)
+    g_flip = jax.lax.dot_general(
+        onehot, xf, dnums, preferred_element_type=jnp.float32
+    )
+    fsel = flip.T[:, :, None]  # (l, C_blk, 1)
+    x_sel = g_straight * (1.0 - fsel) + g_flip * fsel  # (l, C_blk, B)
+
+    # ---- multipliers (VPU) ----------------------------------------------
+    partial = m_blk.T[:, :, None] * x_sel  # (l, C_blk, B)
+
+    # ---- crossbar + adders: one-hot routing matmul (MXU) ------------------
+    p_flat = partial.transpose(1, 0, 2).reshape(c_blk * l, b)
+    row_flat = row_blk.reshape(c_blk * l)
+    onehot_row = (
+        row_flat[:, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (c_blk * l, l), 1)
+    ).astype(jnp.float32)
+    # (l, B) = (C_blk*l, l)^T @ (C_blk*l, B); padding slots carry m==0 and
+    # row==0, contributing exactly zero.
+    acc = jax.lax.dot_general(
+        onehot_row,
+        p_flat,
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[None]  # (1, l, B)
+
+    @pl.when(cb == 0)
+    def _init():
+        y_ref[...] = acc
+
+    @pl.when(cb != 0)
+    def _accum():
+        y_ref[...] += acc
+
+
+def make_gust_spmv(
+    num_windows: int,
+    c_pad: int,
+    l: int,
+    seg_count: int,
+    b: int,
+    *,
+    c_blk: int = 8,
+    interpret: bool = True,
+):
+    """Build the pallas_call for a fixed packed-schedule geometry.
+
+    BlockSpecs:
+      * schedule stream (m/col/row): HBM -> VMEM tiles of (c_blk, l), one
+        per grid step — the Buffer Filler pipeline;
+      * x (straight + flipped): full-array VMEM residency;
+      * y: one (1, l, B) accumulator tile per window, revisited across the
+        color-block (reduction) grid dimension.
+    """
+    if c_pad % c_blk:
+        raise ValueError("c_pad must be a multiple of c_blk")
+    num_cb = c_pad // c_blk
+    grid = (num_windows, num_cb)
+
+    sched_spec = pl.BlockSpec(
+        (c_blk, l), lambda w, cb: (w * num_cb + cb, 0)
+    )
+    x_spec = pl.BlockSpec((seg_count, l, b), lambda w, cb: (0, 0, 0))
+    out_spec = pl.BlockSpec((1, l, b), lambda w, cb: (w, 0, 0))
+
+    kernel = functools.partial(
+        _kernel, l=l, seg_count=seg_count, c_blk=c_blk, b=b
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[sched_spec, sched_spec, sched_spec, x_spec, x_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((num_windows, l, b), jnp.float32),
+        interpret=interpret,
+    )

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (same packed-block semantics).
+
+These mirror the kernels' contracts exactly — same inputs, same outputs —
+with no Pallas, no BlockSpecs, no one-hot tricks: direct gathers and
+scatter-adds.  Every kernel test sweeps shapes/dtypes and asserts
+``assert_allclose(kernel(...), ref(...))``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gust_spmv_ref", "gather_fill_ref"]
+
+
+def gather_fill_ref(
+    col_blocks: jnp.ndarray,  # (T, l) int32 original column indices
+    x_padded: jnp.ndarray,  # (S*l, B) zero-padded vector
+) -> jnp.ndarray:
+    """Oracle for the Buffer Filler: plain gather ``x[col]``, (T, l, B)."""
+    return jnp.take(x_padded.astype(jnp.float32), col_blocks.astype(jnp.int32), axis=0)
+
+
+def gust_spmv_ref(
+    m_blocks: jnp.ndarray,  # (W*C_pad, l) values (0 in padding)
+    col_blocks: jnp.ndarray,  # (W*C_pad, l) int32
+    row_blocks: jnp.ndarray,  # (W*C_pad, l) int32 adder index
+    x_padded: jnp.ndarray,  # (S*l, B)
+    *,
+    num_windows: int,
+    l: int,
+) -> jnp.ndarray:
+    """Oracle for the flagship kernel: gather, multiply, scatter-add into
+    per-window accumulators.  Returns (W, l, B) f32."""
+    total = m_blocks.shape[0]
+    c_pad = total // num_windows
+    v_sch = gather_fill_ref(col_blocks, x_padded)  # (T, l, B)
+    partial = m_blocks.astype(jnp.float32)[:, :, None] * v_sch
+    window = jnp.arange(total, dtype=jnp.int32) // c_pad
+    adder = window[:, None] * l + row_blocks.astype(jnp.int32)  # (T, l)
+    b = x_padded.shape[1]
+    y = jax.ops.segment_sum(
+        partial.reshape(-1, b),
+        adder.reshape(-1),
+        num_segments=num_windows * l,
+    )
+    return y.reshape(num_windows, l, b)

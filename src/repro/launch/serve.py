@@ -1,0 +1,101 @@
+"""Serving driver: batched requests against a (reduced or full) model,
+dense or GUST-sparse decode.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --arch yi_6b --reduced \
+        --requests 6 --max-new 16 [--gust --density 0.2]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.models.model_zoo import build_model
+from repro.serving import GustServeConfig, ServeConfig, ServeLoop
+
+__all__ = ["run_serving"]
+
+
+def run_serving(
+    arch: str,
+    *,
+    reduced: bool = True,
+    batch: int = 4,
+    seq_len: int = 128,
+    requests: int = 4,
+    prompt_len: int = 8,
+    max_new: int = 8,
+    gust: bool = False,
+    density: float = 0.25,
+    gust_length: int = 32,
+    use_kernel: bool = False,
+    seed: int = 0,
+):
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(seed))
+    gcfg = None
+    if gust:
+        gcfg = GustServeConfig(
+            density=density, gust_length=gust_length, use_kernel=use_kernel
+        )
+    sc = ServeConfig(batch=batch, seq_len=seq_len, dtype="float32", gust=gcfg)
+    loop = ServeLoop(lm, params, sc, seed=seed)
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    done = {}
+    for r in range(requests):
+        prompt = rng.integers(0, cfg.vocab, prompt_len).astype(np.int32)
+        rid = loop.submit(prompt, max_new=max_new)
+        loop.run_to_completion()
+        done[rid] = loop.completed[rid]
+    dt = time.time() - t0
+    toks = sum(len(v) for v in done.values())
+    stats = {
+        "requests": len(done),
+        "tokens_generated": toks,
+        "wall_s": round(dt, 2),
+        "tok_per_s": round(toks / dt, 1),
+        "gust": bool(gust),
+    }
+    if gust and loop.gust_tree is not None:
+        stats["gust_stream_utilization"] = {
+            k: round(v["stream_utilization"], 4)
+            for k, v in loop.gust_tree["stats"].items()
+        }
+    return done, stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--gust", action="store_true")
+    ap.add_argument("--density", type=float, default=0.25)
+    ap.add_argument("--gust-length", type=int, default=32)
+    ap.add_argument("--use-kernel", action="store_true")
+    args = ap.parse_args()
+    _, stats = run_serving(
+        args.arch, batch=args.batch, seq_len=args.seq_len,
+        requests=args.requests, prompt_len=args.prompt_len,
+        max_new=args.max_new, gust=args.gust, density=args.density,
+        gust_length=args.gust_length, use_kernel=args.use_kernel,
+    )
+    print(json.dumps(stats))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model substrate: layers, attention, recurrent mixers, MoE, stacks."""

@@ -1,0 +1,149 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity.
+
+Dispatch is scatter-based (MegaBlocks-style grouping rather than the
+GShard (T, E, C) one-hot einsum): each selected (token, expert) pair gets
+a rank within its expert via a cumulative count; pairs past the capacity
+are dropped (their combine weight contributes nothing, matching
+capacity-bounded token-choice semantics).  The grouped activations
+(E, C, d) then run through all experts as one batched einsum — the layout
+that experts-sharded (EP) meshes want, since the E dimension is the
+sharding axis and the scatter/gather become all-to-alls under GSPMD.
+
+Used by llama4-scout (16e top-1) and dbrx (16e top-4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain_ep
+
+from .layers import _he
+
+__all__ = ["MoESpec", "init_moe", "moe_ffn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    min_capacity: int = 4
+    router_z_coef: float = 1e-3
+    token_chunk: int = 16_384  # dispatch chunk: bounds the (E, C, d)
+    # grouped buffer at prefill scale (1M tokens would otherwise need a
+    # 64 GiB scatter buffer); capacity is enforced per chunk
+
+
+def init_moe(key, spec: MoESpec):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e, d, f = spec.n_experts, spec.d_model, spec.d_ff
+    return {
+        "router": _he(kr, (d, e)),
+        "w_gate": _he(kg, (e, d, f), scale_axis=1),
+        "w_up": _he(ku, (e, d, f), scale_axis=1),
+        "w_down": _he(kd, (e, f, d), scale_axis=1),
+    }
+
+
+def _capacity(tokens: int, spec: MoESpec) -> int:
+    c = int(tokens * spec.top_k * spec.capacity_factor / spec.n_experts)
+    return max(c, spec.min_capacity)
+
+
+def moe_ffn(p, x: jnp.ndarray, spec: MoESpec) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(B, S, d) -> ((B, S, d), aux_loss).  aux = load-balance + z-loss.
+
+    Token streams longer than ``token_chunk`` are dispatched chunk by
+    chunk (lax.scan): per-chunk capacity keeps the grouped (E, C, d)
+    buffer bounded regardless of sequence length."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    if t > spec.token_chunk and t % spec.token_chunk == 0:
+        nc = t // spec.token_chunk
+        chunks = xf.reshape(nc, spec.token_chunk, d)
+
+        def body(aux_acc, xc):
+            yc, aux = _moe_tokens(p, xc, spec)
+            return aux_acc + aux, yc
+
+        aux_sum, ys = jax.lax.scan(body, 0.0, chunks)
+        return ys.reshape(b, s, d).astype(x.dtype), aux_sum / nc
+    out, aux = _moe_tokens(p, xf, spec)
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _moe_tokens(p, xf: jnp.ndarray, spec: MoESpec) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(T, d) -> ((T, d), aux)."""
+    t, d = xf.shape
+    e, k = spec.n_experts, spec.top_k
+    cap = _capacity(t, spec)
+
+    logits = jnp.einsum(
+        "td,de->te", xf, p["router"], preferred_element_type=jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # rank of each (token, slot) within its expert, computed via a one-hot
+    # cumulative sum over the flattened (token-major) selection order
+    sel = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)  # (T, k, E)
+    flat_sel = sel.reshape(t * k, e)
+    rank = jnp.cumsum(flat_sel, axis=0) - flat_sel  # exclusive count
+    rank = (rank * flat_sel).sum(-1).reshape(t, k)  # (T, k)
+    keep = rank < cap
+
+    dest = expert_idx * cap + rank  # (T, k) slot in (E*C)
+    dest = jnp.where(keep, dest, e * cap)  # over-capacity -> dropped
+
+    # Dispatch via the INVERSE index: scatter token ids (4 bytes/slot)
+    # instead of token vectors (2d bytes/slot), then gather rows.  The
+    # big (E, C, d) buffer is then produced by a gather whose output is
+    # EP-sharded, so under GSPMD the d-sized data crosses the mesh once
+    # ((T, d) all-gather) rather than as a full (E, C, d) scatter
+    # all-reduce — ~2kd/4 ≈ 3000x less index traffic and ~C·E/T less
+    # payload traffic (the dbrx train cell's collective term dropped 4x).
+    token_of = jnp.repeat(jnp.arange(t), k).reshape(t, k)
+    inv = jnp.full((e * cap,), t, jnp.int32)  # t = zero-row sentinel
+    inv = inv.at[dest.reshape(-1)].set(
+        token_of.reshape(-1).astype(jnp.int32), mode="drop"
+    )
+    w_slot = jnp.zeros((e * cap,), jnp.float32)
+    w_slot = w_slot.at[dest.reshape(-1)].set(
+        (gate_vals * keep).reshape(-1).astype(jnp.float32), mode="drop"
+    )
+    xf_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)])
+    gx = constrain_ep(jnp.take(xf_pad, inv, axis=0).reshape(e, cap, d))
+
+    # expert FFN (SwiGLU), batched over experts
+    g = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", gx, p["w_gate"], preferred_element_type=jnp.float32)
+    )
+    u = jnp.einsum("ecd,edf->ecf", gx, p["w_up"], preferred_element_type=jnp.float32)
+    y = jnp.einsum(
+        "ecf,efd->ecd", (g * u).astype(xf.dtype), p["w_down"],
+        preferred_element_type=xf.dtype,
+    ).astype(xf.dtype)
+    y = constrain_ep(y)
+
+    # combine: weight in place, scatter-add back by token id (drops land
+    # on the sentinel row and are sliced off)
+    y_w = y.reshape(e * cap, d).astype(jnp.float32) * w_slot[:, None]
+    out = jnp.zeros((t + 1, d), jnp.float32).at[inv].add(y_w)[:t]
+    out = out.astype(xf.dtype)
+
+    # aux losses: Switch-style load balance + router z-loss
+    me = probs.mean(axis=0)  # (E,)
+    ce = (sel.sum(1) > 0).astype(jnp.float32).mean(axis=0)  # fraction routed
+    lb = e * jnp.sum(me * ce)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = lb + spec.router_z_coef * z
+    return out, aux

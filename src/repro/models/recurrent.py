@@ -1,0 +1,473 @@
+"""Recurrent sequence mixers: xLSTM (mLSTM + sLSTM) and RG-LRU (Griffin).
+
+All three expose the same triple of regimes as attention:
+
+  * ``*_train``   — full-sequence parallel/chunkwise form;
+  * ``*_prefill`` — train-shaped pass that also returns the recurrent
+    state after the last position (the "cache" of recurrent models);
+  * ``*_decode``  — one-token state update, O(1) in sequence length (this
+    is why these architectures run the ``long_500k`` shape).
+
+mLSTM (arXiv:2405.04517): matrix memory ``C_t = f_t C_{t-1} + i_t v_t
+k_t^T`` with exponential gating, evaluated **chunkwise-parallel**: within a
+chunk the quadratic stabilized-gate form (MXU matmuls), across chunks an
+O(1) state carry — the linear-attention equivalent of flash attention.
+
+sLSTM: scalar memory with recurrent gate connections (block-diagonal R per
+head), inherently sequential — lax.scan over time.
+
+RG-LRU (arXiv:2402.19427): gated linear recurrence with input-dependent
+decay ``a_t = exp(c · softplus(Λ) · r_t)``; evaluated with an associative
+scan in train/prefill and a one-step update at decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _he
+
+__all__ = [
+    "MLSTMSpec",
+    "init_mlstm",
+    "mlstm_train",
+    "mlstm_init_state",
+    "mlstm_decode",
+    "SLSTMSpec",
+    "init_slstm",
+    "slstm_train",
+    "slstm_init_state",
+    "slstm_decode",
+    "RGLRUSpec",
+    "init_rglru",
+    "rglru_train",
+    "rglru_init_state",
+    "rglru_decode",
+]
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMSpec:
+    d_model: int
+    n_heads: int
+    expand: int = 2  # up-projection factor
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def d_head(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def init_mlstm(key, spec: MLSTMSpec):
+    ks = jax.random.split(key, 8)
+    d, di, h = spec.d_model, spec.d_inner, spec.n_heads
+    return {
+        "w_up": _he(ks[0], (d, di)),
+        "w_ogate": _he(ks[1], (d, di)),
+        "conv": jax.random.normal(ks[2], (spec.conv_width, di), jnp.float32) * 0.1,
+        "wq": _he(ks[3], (di, di)),
+        "wk": _he(ks[4], (di, di)),
+        "wv": _he(ks[5], (di, di)),
+        "w_if": _he(ks[6], (di, 2 * h)),  # input & forget gate pre-acts
+        "w_down": _he(ks[7], (di, d)),
+        "skip_scale": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: (B, S, D), w: (W, D).  state: (B, W-1, D)
+    carries the trailing inputs for decode continuity."""
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i] for i in range(width)
+    )
+    new_state = xp[:, xp.shape[1] - (width - 1) :]
+    return out.astype(x.dtype), new_state
+
+
+def _mlstm_qkvif(p, x, spec: MLSTMSpec, conv_state=None):
+    b, s, _ = x.shape
+    h, dh = spec.n_heads, spec.d_head
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"], preferred_element_type=jnp.float32)
+    up = up.astype(x.dtype)
+    conv_out, conv_state = _causal_conv(up, p["conv"], conv_state)
+    conv_act = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    q = jnp.einsum("bse,ef->bsf", conv_act, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bse,ef->bsf", conv_act, p["wk"]).reshape(b, s, h, dh)
+    v = jnp.einsum("bse,ef->bsf", up, p["wv"]).reshape(b, s, h, dh)
+    gates = jnp.einsum(
+        "bse,eg->bsg", conv_act, p["w_if"], preferred_element_type=jnp.float32
+    )
+    i_pre, f_pre = gates[..., :h], gates[..., h:]
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    ogate = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", x, p["w_ogate"], preferred_element_type=jnp.float32)
+    )
+    skip = conv_act * p["skip_scale"]
+    return q, k, v, i_pre.astype(jnp.float32), logf, ogate, up, skip, conv_state
+
+
+def _mlstm_chunk_scan(q, k, v, i_pre, logf, state):
+    """Chunkwise-parallel stabilized mLSTM core.
+
+    q/k/v: (B, NC, T, H, D); i_pre/logf: (B, NC, T, H).
+    state: (C (B,H,D,D), n (B,H,D), m (B,H)).
+    Returns h (B, NC, T, H, D) and the final state.
+    """
+    b, nc, t, h, d = q.shape
+    scale = 1.0 / jnp.sqrt(d)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, ic, lfc = xs  # (B,T,H,D) / (B,T,H)
+        F = jnp.cumsum(lfc, axis=1)  # inclusive prefix logf, (B,T,H)
+        # intra-chunk decay matrix: D[t,s] = F_t - F_s + i_s for s <= t
+        Dm = F[:, :, None] - F[:, None, :] + ic[:, None, :, :]  # (B,T,S,H)
+        causal = jnp.tril(jnp.ones((t, t), bool))
+        Dm = jnp.where(causal[None, :, :, None], Dm, -jnp.inf)
+        # inter-chunk decay for queries: m_prev + F_t
+        inter = m[:, None] + F  # (B,T,H)
+        m_new_q = jnp.maximum(inter, Dm.max(axis=2))  # (B,T,H)
+        m_q = jnp.where(jnp.isfinite(m_new_q), m_new_q, 0.0)
+
+        w_intra = jnp.exp(Dm - m_q[:, :, None, :])  # (B,T,S,H)
+        w_inter = jnp.exp(inter - m_q)  # (B,T,H)
+
+        s_qk = (
+            jnp.einsum("bthd,bshd->btsh", qc, kc, preferred_element_type=jnp.float32)
+            * scale
+        )
+        intra_num = jnp.einsum("btsh,bshd->bthd", s_qk * w_intra, vc.astype(jnp.float32))
+        inter_num = (
+            jnp.einsum("bthd,bhde->bthe", qc.astype(jnp.float32), C) * scale
+        ) * w_inter[..., None]
+        num = intra_num + inter_num
+
+        intra_den = jnp.einsum("btsh,bsh->bth", s_qk * w_intra, jnp.ones((b, t, h)))
+        # normalizer: n-vector dotted with q
+        inter_den = (
+            jnp.einsum("bthd,bhd->bth", qc.astype(jnp.float32), n) * scale
+        ) * w_inter
+        den = jnp.maximum(jnp.abs(intra_den + inter_den), jnp.exp(-m_q))
+        hc = (num / den[..., None]).astype(qc.dtype)
+
+        # state update to end of chunk
+        F_T = F[:, -1]  # (B,H)
+        decay_k = F_T[:, None] - F + ic  # (B,T,H): F_T - F_s + i_s
+        m_next = jnp.maximum(m + F_T, decay_k.max(axis=1))
+        w_k = jnp.exp(decay_k - m_next[:, None])  # (B,T,H)
+        C_new = jnp.exp(m + F_T - m_next)[:, :, None, None] * C + jnp.einsum(
+            "bthd,bthe->bhde", (kc.astype(jnp.float32) * w_k[..., None]), vc.astype(jnp.float32)
+        )
+        n_new = jnp.exp(m + F_T - m_next)[:, :, None] * n + jnp.einsum(
+            "bthd,bth->bhd", kc.astype(jnp.float32), w_k
+        )
+        return (C_new, n_new, m_next), hc
+
+    xs = tuple(
+        a.transpose(1, 0, 2, 3, 4) if a.ndim == 5 else a.transpose(1, 0, 2, 3)
+        for a in (q, k, v, i_pre, logf)
+    )
+    state, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3, 4), state  # (B,NC,T,H,D)
+
+
+def mlstm_init_state(spec: MLSTMSpec, batch: int, dtype=jnp.float32):
+    h, dh = spec.n_heads, spec.d_head
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_width - 1, spec.d_inner), dtype),
+    }
+
+
+def mlstm_train(p, x, spec: MLSTMSpec, state=None, return_state: bool = False):
+    """(B, S, d) -> (B, S, d); S padded internally to the chunk size."""
+    b, s, d = x.shape
+    q, k, v, i_pre, logf, ogate, up, skip, conv_state = _mlstm_qkvif(
+        p, x, spec, None if state is None else state["conv"]
+    )
+    t = min(spec.chunk, s)
+    nc = -(-s // t)
+    pad = nc * t - s
+
+    def pad_t(a, fill=0.0):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2), constant_values=fill)
+
+    if pad:
+        q, k, v = pad_t(q), pad_t(k), pad_t(v)
+        i_pre, logf = pad_t(i_pre, -1e9), pad_t(logf, 0.0)
+    h, dh = spec.n_heads, spec.d_head
+    shp = (b, nc, t, h, dh)
+    core_state = (
+        (state["C"], state["n"], state["m"])
+        if state is not None
+        else (
+            jnp.zeros((b, h, dh, dh), jnp.float32),
+            jnp.zeros((b, h, dh), jnp.float32),
+            jnp.zeros((b, h), jnp.float32),
+        )
+    )
+    hs, core_state = _mlstm_chunk_scan(
+        q.reshape(shp), k.reshape(shp), v.reshape(shp),
+        i_pre.reshape(b, nc, t, h), logf.reshape(b, nc, t, h), core_state,
+    )
+    hflat = hs.reshape(b, nc * t, h * dh)[:, :s]
+    y = (ogate.astype(jnp.float32) * (hflat.astype(jnp.float32) + skip.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"], preferred_element_type=x.dtype).astype(x.dtype)
+    if return_state:
+        new_state = {
+            "C": core_state[0], "n": core_state[1], "m": core_state[2],
+            "conv": conv_state,
+        }
+        return out, new_state
+    return out
+
+
+def mlstm_decode(p, x, spec: MLSTMSpec, state):
+    """One token. x: (B, 1, d)."""
+    q, k, v, i_pre, logf, ogate, up, skip, conv_state = _mlstm_qkvif(
+        p, x, spec, state["conv"]
+    )
+    b = x.shape[0]
+    h, dh = spec.n_heads, spec.d_head
+    q1, k1, v1 = (a[:, 0].astype(jnp.float32) for a in (q, k, v))  # (B,H,D)
+    i1, f1 = i_pre[:, 0], logf[:, 0]  # (B,H)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(f1 + m, i1)
+    fw = jnp.exp(f1 + m - m_new)[:, :, None, None]
+    iw = jnp.exp(i1 - m_new)[:, :, None, None]
+    C_new = fw * C + iw * jnp.einsum("bhd,bhe->bhde", k1, v1)
+    n_new = fw[..., 0] * n + iw[..., 0] * k1
+    scale = 1.0 / jnp.sqrt(dh)
+    num = jnp.einsum("bhd,bhde->bhe", q1, C_new) * scale
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n_new) * scale), jnp.exp(-m_new)
+    )
+    hvec = (num / den[..., None]).reshape(b, 1, h * dh)
+    y = (ogate.astype(jnp.float32) * (hvec + skip.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"], preferred_element_type=x.dtype).astype(x.dtype)
+    return out, {"C": C_new, "n": n_new, "m": m_new, "conv": conv_state}
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMSpec:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 4.0 / 3.0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+
+def init_slstm(key, spec: SLSTMSpec):
+    ks = jax.random.split(key, 7)
+    d, h, dh = spec.d_model, spec.n_heads, spec.d_head
+    return {
+        # input projections for gates z, i, f, o: (d, 4, d)
+        "w_in": _he(ks[0], (d, 4, d)),
+        # recurrent block-diagonal per head: (4, h, dh, dh)
+        "r": jax.random.normal(ks[1], (4, h, dh, dh), jnp.float32) * (1.0 / jnp.sqrt(dh)),
+        "bias": jnp.zeros((4, d), jnp.float32),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "w_up_gate": _he(ks[2], (d, spec.d_ff)),
+        "w_up": _he(ks[3], (d, spec.d_ff)),
+        "w_down": _he(ks[4], (spec.d_ff, d)),
+    }
+
+
+def slstm_init_state(spec: SLSTMSpec, batch: int, dtype=jnp.float32):
+    d = spec.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p, xt, state, spec: SLSTMSpec):
+    """One timestep.  xt: (B, 4, d) pre-activations from the input proj."""
+    b = xt.shape[0]
+    h_heads = state["h"].reshape(b, spec.n_heads, spec.d_head)
+    rec = jnp.einsum("bhk,ghkl->bghl", h_heads.astype(jnp.float32), p["r"])
+    rec = rec.reshape(b, 4, spec.d_model)
+    pre = xt.astype(jnp.float32) + rec + p["bias"][None]
+    z = jnp.tanh(pre[:, 0])
+    i_pre, f_pre = pre[:, 1], pre[:, 2]
+    o = jax.nn.sigmoid(pre[:, 3])
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    iw = jnp.exp(i_pre - m_new)
+    fw = jnp.exp(logf + state["m"] - m_new)
+    c_new = fw * state["c"] + iw * z
+    n_new = jnp.maximum(fw * state["n"] + iw, jnp.exp(-m_new))
+    h_new = o * (c_new / n_new)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}, h_new
+
+
+def _slstm_core(p, x, spec: SLSTMSpec, state):
+    b, s, d = x.shape
+    xin = jnp.einsum("bsd,dgk->bsgk", x, p["w_in"], preferred_element_type=jnp.float32)
+
+    def step(st, xt):
+        st, h = _slstm_cell(p, xt, st, spec)
+        return st, h
+
+    state, hs = jax.lax.scan(step, state, xin.transpose(1, 0, 2, 3))
+    return hs.transpose(1, 0, 2).astype(x.dtype), state
+
+
+def _slstm_out(p, x, hs):
+    # headwise group-norm then gated FFN projection
+    hs32 = hs.astype(jnp.float32)
+    mu = hs32.mean(-1, keepdims=True)
+    var = hs32.var(-1, keepdims=True)
+    hn = ((hs32 - mu) * jax.lax.rsqrt(var + 1e-6) * p["gn_scale"]).astype(x.dtype)
+    g = jax.nn.gelu(
+        jnp.einsum("bsd,df->bsf", hn, p["w_up_gate"], preferred_element_type=jnp.float32)
+    )
+    u = jnp.einsum("bsd,df->bsf", hn, p["w_up"], preferred_element_type=jnp.float32)
+    return jnp.einsum(
+        "bsf,fd->bsd", g * u, p["w_down"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def slstm_train(p, x, spec: SLSTMSpec, state=None, return_state: bool = False):
+    b = x.shape[0]
+    if state is None:
+        state = slstm_init_state(spec, b)
+    hs, state = _slstm_core(p, x, spec, state)
+    out = _slstm_out(p, x, hs)
+    return (out, state) if return_state else out
+
+
+def slstm_decode(p, x, spec: SLSTMSpec, state):
+    out, state = slstm_train(p, x, spec, state, return_state=True)
+    return out, state
+
+
+# ===========================================================================
+# RG-LRU (Griffin recurrent block)
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUSpec:
+    d_model: int
+    d_rnn: int = 0  # 0 -> d_model
+    conv_width: int = 4
+    c_const: float = 8.0
+
+    @property
+    def width(self) -> int:
+        return self.d_rnn or self.d_model
+
+
+def init_rglru(key, spec: RGLRUSpec):
+    ks = jax.random.split(key, 6)
+    d, w = spec.d_model, spec.width
+    # Λ init so that a = exp(-c·softplus(Λ)·r) starts near 0.9..0.999
+    lam = jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / spec.c_const))
+    return {
+        "w_x": _he(ks[0], (d, w)),
+        "w_gate_branch": _he(ks[1], (d, w)),
+        "conv": jax.random.normal(ks[2], (spec.conv_width, w), jnp.float32) * 0.1,
+        "w_rgate": _he(ks[3], (w, w)),
+        "w_igate": _he(ks[4], (w, w)),
+        "lam": lam,
+        "w_out": _he(ks[5], (w, d)),
+    }
+
+
+def rglru_init_state(spec: RGLRUSpec, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, spec.width), jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_width - 1, spec.width), dtype),
+    }
+
+
+def _rglru_gates(p, u, spec: RGLRUSpec):
+    """u: (B, S, W) post-conv branch.  Returns (log_a, gated_input)."""
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["w_rgate"], preferred_element_type=jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["w_igate"], preferred_element_type=jnp.float32)
+    )
+    log_a = -spec.c_const * jax.nn.softplus(p["lam"])[None, None] * r  # (B,S,W) <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * u.astype(jnp.float32))
+    return log_a, gated
+
+
+def rglru_train(p, x, spec: RGLRUSpec, state=None, return_state: bool = False):
+    """Griffin recurrent block: gated dual-branch with RG-LRU inner scan."""
+    b, s, d = x.shape
+    if state is None:
+        state = rglru_init_state(spec, b)
+    branch = jnp.einsum("bsd,dw->bsw", x, p["w_x"], preferred_element_type=jnp.float32).astype(x.dtype)
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["w_gate_branch"], preferred_element_type=jnp.float32)
+    ).astype(x.dtype)
+    u, conv_state = _causal_conv(branch, p["conv"], state["conv"])
+    log_a, gated = _rglru_gates(p, u, spec)
+
+    # associative scan over time: h_t = a_t h_{t-1} + b_t
+    a_seq = jnp.exp(log_a)  # (B,S,W)
+    b_seq = gated
+    # fold the carried state into the first step
+    b_seq = b_seq.at[:, 0].add(a_seq[:, 0] * state["h"])
+
+    def comb(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    _, h_seq = jax.lax.associative_scan(comb, (a_seq, b_seq), axis=1)
+    y = (h_seq * gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"], preferred_element_type=x.dtype).astype(x.dtype)
+    if return_state:
+        return out, {"h": h_seq[:, -1], "conv": conv_state}
+    return out
+
+
+def rglru_decode(p, x, spec: RGLRUSpec, state):
+    b = x.shape[0]
+    branch = jnp.einsum("bsd,dw->bsw", x, p["w_x"], preferred_element_type=jnp.float32).astype(x.dtype)
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["w_gate_branch"], preferred_element_type=jnp.float32)
+    ).astype(x.dtype)
+    u, conv_state = _causal_conv(branch, p["conv"], state["conv"])
+    log_a, gated = _rglru_gates(p, u, spec)
+    h_new = jnp.exp(log_a[:, 0]) * state["h"] + gated[:, 0]
+    y = (h_new[:, None] * gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"], preferred_element_type=x.dtype).astype(x.dtype)
+    return out, {"h": h_new, "conv": conv_state}

@@ -1,0 +1,233 @@
+"""GUST-sparse serving: the paper's technique as a first-class feature.
+
+Decode-time LM inference is matvec-dominated.  ``gustify`` converts a
+trained model's MLP weights into the GUST scheduled format (magnitude
+pruning -> edge-coloring schedule -> packed blocks), **once**, at
+weight-load time — the paper's §3.3/§5.3 amortization ("the scheduling
+for each matrix only needs to be computed once ... even if the vector
+changes").  ``decode_step_gust`` then mirrors the model's decode step but
+routes each layer's MLP matvecs through the GUST SpMV path.
+
+Layer stacking: packed schedules are padded to a *uniform* color count
+C_pad across layers so the leaves stack along the reps axis and the layer
+scan stays a single compact HLO — the GUST schedule is literally part of
+the serving checkpoint.
+
+Applies to pattern-length-1 dense archs (phi3/yi/mistral-large/llava/
+gemma3 would need per-position stacks — gemma3 and the MoE archs run the
+per-expert variant documented in DESIGN.md §5).  ``dryrun_specs`` sizes
+the schedule stream from the paper's Eq. 9 bound so the 512-chip dry-run
+lowers the GUST decode path without running the scheduler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.bounds import expected_colors_bound
+from repro.core.formats import COOMatrix
+from repro.core.gust_linear import prune_by_magnitude
+from repro.core.scheduler import schedule
+from repro.kernels.ops import PackedSchedule, gust_spmm, pack_schedule, packed_spec
+from repro.models import transformer as T
+from repro.models.layers import apply_norm
+from repro.models.model_zoo import LM
+
+__all__ = ["GustServeConfig", "gustify", "decode_step_gust", "dryrun_specs"]
+
+_MLP_MATS = ("w_gate", "w_up", "w_down")
+
+
+@dataclasses.dataclass(frozen=True)
+class GustServeConfig:
+    enable: bool = True
+    density: float = 0.1
+    gust_length: int = 256
+    load_balance: bool = True
+    method: str = "fast"
+    use_kernel: bool = False  # Pallas path (interpret on CPU) vs XLA path
+    compact: bool = False  # bf16 values + int16 indices: 12 -> 6 B/slot,
+    # the TPU analogue of the paper's (64 + log l)-bit packed stream
+    mats: Tuple[str, ...] = _MLP_MATS
+
+    @property
+    def value_dtype(self):
+        return jnp.bfloat16 if self.compact else jnp.float32
+
+    @property
+    def index_dtype(self):
+        return jnp.int16 if self.compact else jnp.int32
+
+
+def _schedule_one(w: np.ndarray, cfg: GustServeConfig):
+    """w: (d_in, d_out) layer weight; GUST computes y = M x with
+    M = w^T (d_out, d_in)."""
+    m = prune_by_magnitude(np.asarray(w, np.float32).T, cfg.density)
+    rows, cols = np.nonzero(m)
+    coo = COOMatrix(m.shape, rows.astype(np.int64), cols.astype(np.int64),
+                    m[rows, cols].astype(np.float32))
+    return schedule(coo, cfg.gust_length, load_balance=cfg.load_balance,
+                    method=cfg.method)
+
+
+def gustify(lm: LM, params, cfg: GustServeConfig) -> Dict:
+    """Build stacked packed schedules for every rep-layer MLP matrix.
+
+    Returns ``{"mats": {name: {"leaves": {...(R, ...)}, "meta": PackedSchedule
+    prototype}}, "stats": {...}}``.
+    """
+    if len(lm.stack.pattern) != 1 or lm.stack.pattern[0].kind != "attn_mlp":
+        raise ValueError(
+            "gustify currently targets homogeneous dense stacks "
+            f"(got pattern {[b.kind for b in lm.stack.pattern]})"
+        )
+    mlp_params = params["stack"]["reps"][0]["mlp"]
+    reps = lm.stack.reps
+    out: Dict = {"mats": {}, "stats": {}}
+    for name in cfg.mats:
+        w_stack = np.asarray(mlp_params[name])  # (R, d_in, d_out)
+        packed_list = []
+        cycles = []
+        for r in range(reps):
+            sched = _schedule_one(w_stack[r], cfg)
+            cycles.append(sched.cycles)
+            packed_list.append(sched)
+        packs = [
+            pack_schedule(s, c_blk=8, value_dtype=cfg.value_dtype,
+                          index_dtype=cfg.index_dtype)
+            for s in packed_list
+        ]
+        c_uniform = max(p.c_pad for p in packs)
+        # re-pad every layer to the uniform c_pad so leaves stack
+        def repad(p: PackedSchedule) -> PackedSchedule:
+            if p.c_pad == c_uniform:
+                return p
+            W, l = p.num_windows, p.l
+            def grow(a, fill):
+                a3 = np.asarray(a).reshape(W, p.c_pad, l)
+                if fill == "lane":  # padding gathers v_padded[lane]
+                    pad = np.tile(
+                        np.arange(l, dtype=np.int32),
+                        (W, c_uniform - p.c_pad, 1),
+                    )
+                else:
+                    pad = np.full((W, c_uniform - p.c_pad, l), fill, a3.dtype)
+                return np.concatenate([a3, pad], axis=1).reshape(W * c_uniform, l)
+            return PackedSchedule(
+                m_blk=jnp.asarray(grow(p.m_blk, 0.0)),
+                col_blk=jnp.asarray(grow(p.col_blk, "lane")),
+                row_blk=jnp.asarray(grow(p.row_blk, 0)),
+                row_perm=p.row_perm,
+                l=p.l, num_windows=W, c_pad=c_uniform, shape=p.shape,
+                fusable=p.fusable,
+            )
+        packs = [repad(p) for p in packs]
+        leaves = {
+            "m_blk": jnp.stack([p.m_blk for p in packs]),
+            "col_blk": jnp.stack([p.col_blk for p in packs]),
+            "row_blk": jnp.stack([p.row_blk for p in packs]),
+            "row_perm": jnp.stack([p.row_perm for p in packs]),
+        }
+        proto = packs[0]
+        out["mats"][name] = {"leaves": leaves, "meta": (
+            proto.l, proto.num_windows, proto.c_pad, proto.shape, proto.fusable)}
+        nnz = int(np.count_nonzero(np.asarray(leaves["m_blk"])))
+        slots = leaves["m_blk"].size
+        out["stats"][name] = {
+            "cycles_per_layer": cycles,
+            "c_pad": c_uniform,
+            "stream_utilization": nnz / max(slots, 1),
+        }
+    return out
+
+
+def _packed_from_slices(leaves_slice, meta) -> PackedSchedule:
+    l, w, c_pad, shape, fusable = meta
+    return PackedSchedule(
+        m_blk=leaves_slice["m_blk"],
+        col_blk=leaves_slice["col_blk"],
+        row_blk=leaves_slice["row_blk"],
+        row_perm=leaves_slice["row_perm"],
+        l=l, num_windows=w, c_pad=c_pad, shape=shape, fusable=fusable,
+    )
+
+
+def _gust_mlp(gust_slice, metas, x, mlp_kind: str, cfg: GustServeConfig):
+    """x: (B, 1, d).  SwiGLU/GeGLU with every matvec through GUST."""
+    b = x.shape[0]
+    xt = x[:, 0].T.astype(jnp.float32)  # (d, B)
+    act = jax.nn.silu if mlp_kind == "swiglu" else jax.nn.gelu
+
+    def mv(name, v):
+        packed = _packed_from_slices(gust_slice[name], metas[name])
+        return gust_spmm(packed, v, use_kernel=cfg.use_kernel)
+
+    g = act(mv("w_gate", xt).astype(jnp.float32))
+    u = mv("w_up", xt).astype(jnp.float32)
+    h = (g * u)  # (f, B)
+    y = mv("w_down", h)  # (d, B)
+    return y.T[:, None, :].astype(x.dtype)  # (B, 1, d)
+
+
+def decode_step_gust(lm: LM, params, gust, caches, tokens, pos, *,
+                     cfg: GustServeConfig, dtype=jnp.bfloat16):
+    """Mirror of LM.decode_step with the per-layer MLP routed through GUST.
+
+    ``gust`` is the pytree produced by :func:`gustify` (or dryrun_specs).
+    """
+    sc = lm.stack
+    bc = sc.pattern[0]
+    x = lm._embed_tokens(params, tokens, dtype)
+    metas = {k: v["meta"] for k, v in gust["mats"].items()}
+    gust_leaves = {k: v["leaves"] for k, v in gust["mats"].items()}
+
+    def body(x, xs):
+        p_sl, c_sl, g_sl = xs
+        h = apply_norm(p_sl["ln_attn"], x, kind=bc.norm_kind)
+        from repro.models import attention as A
+
+        y, cache = A.decode_step(p_sl["attn"], h, bc.attn, c_sl, pos)
+        x = x + y
+        h = apply_norm(p_sl["ln_mlp"], x, kind=bc.norm_kind)
+        x = x + _gust_mlp(g_sl, metas, h, bc.mlp_kind, cfg)
+        return x, cache
+
+    x, rep_caches = jax.lax.scan(
+        body, x, (params["stack"]["reps"][0], caches["reps"][0], gust_leaves)
+    )
+    new_caches = {"reps": (rep_caches,), "tail": caches["tail"]}
+    logits = lm._logits(params, x)
+    return logits, new_caches
+
+
+def dryrun_specs(lm: LM, cfg: GustServeConfig) -> Dict:
+    """ShapeDtypeStruct stand-in for the gust pytree, with the scheduled
+    stream sized from Eq. 9: C = E[colors] bound at the pruned density —
+    the dry-run proof that the GUST decode path lowers and fits."""
+    reps = lm.stack.reps
+    d = lm.cfg.d_model
+    f = lm.cfg.d_ff
+    l = cfg.gust_length
+    sds = jax.ShapeDtypeStruct
+    out: Dict = {"mats": {}, "stats": {}}
+    for name in cfg.mats:
+        m, n = (d, f) if name == "w_down" else (f, d)
+        W = max(-(-m // l), 1)
+        c = expected_colors_bound(n, cfg.density, l)
+        c_pad = max(-(-int(np.ceil(c)) // 8) * 8, 8)
+        out["mats"][name] = {
+            "leaves": {
+                "m_blk": sds((reps, W * c_pad, l), cfg.value_dtype),
+                "col_blk": sds((reps, W * c_pad, l), cfg.index_dtype),
+                "row_blk": sds((reps, W * c_pad, l), cfg.index_dtype),
+                "row_perm": sds((reps, W * l), jnp.int32),
+            },
+            "meta": (l, W, c_pad, (m, n), True),
+        }
+    return out

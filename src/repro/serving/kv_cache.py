@@ -1,0 +1,57 @@
+"""KV-cache management for serving: allocation, sharding, accounting.
+
+The cache *structure* lives with the blocks (models/attention.py defines
+dense and ring-buffer caches; models/recurrent.py the recurrent states;
+models/transformer.py stacks them).  This module owns the serving-side
+concerns: sizing/accounting per (arch × shape), dtype policy, and the
+NamedSharding placement used by the dry-run and the serve driver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import cache_spec_overrides
+from repro.models.model_zoo import LM
+
+__all__ = ["CachePolicy", "cache_specs", "cache_shardings", "cache_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePolicy:
+    dtype: str = "bfloat16"  # KV dtype (recurrent f32 states keep f32)
+
+    @property
+    def jnp_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+
+def cache_specs(lm: LM, batch: int, seq_len: int, policy: CachePolicy = CachePolicy()):
+    """ShapeDtypeStruct pytree of the serving cache (no allocation)."""
+    return jax.eval_shape(
+        lambda: lm.init_caches(batch, seq_len, policy.jnp_dtype)
+    )
+
+
+def cache_shardings(lm: LM, mesh: Mesh, batch: int, seq_len: int,
+                    policy: CachePolicy = CachePolicy()):
+    """NamedSharding pytree: batch over DP, cache sequence over model."""
+    specs = cache_specs(lm, batch, seq_len, policy)
+    spec_of = cache_spec_overrides(mesh, batch)
+    return jax.tree_util.tree_map_with_path(spec_of, specs)
+
+
+def cache_bytes(lm: LM, batch: int, seq_len: int,
+                policy: CachePolicy = CachePolicy()) -> int:
+    """Total cache footprint (all layers, all sequences)."""
+    specs = cache_specs(lm, batch, seq_len, policy)
+    return sum(
+        int(jnp.dtype(x.dtype).itemsize) * int(jnp.prod(jnp.array(x.shape)))
+        for x in jax.tree.leaves(specs)
+    )

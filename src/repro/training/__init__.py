@@ -1,0 +1,6 @@
+"""Training layer: optimizer, train-step factory, checkpoint, fault tolerance."""
+
+from .optimizer import AdamWConfig, init_opt_state, adamw_update
+from .train_loop import TrainConfig, make_train_step, init_train_state
+from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from .compression import CompressionConfig

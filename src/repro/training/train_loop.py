@@ -1,0 +1,100 @@
+"""train_step factory: remat, mixed precision, µbatch accumulation,
+optional gradient compression — one jit-able pure function.
+
+The factory closes over static config and returns
+
+    train_step(state, batch) -> (state, metrics)
+
+with ``state = {"params", "opt", "residual"?}`` a pytree the launcher
+shards via distributed.sharding.param_specs.  Microbatching runs as a
+``lax.scan`` over gradient accumulation slices so the HLO stays compact
+at any accumulation depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import LM
+
+from .compression import CompressionConfig, compress_grads, init_residual
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+__all__ = ["TrainConfig", "make_train_step", "init_train_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1  # gradient accumulation
+    dtype: str = "bfloat16"  # compute dtype
+    remat: bool = True
+    compression: CompressionConfig = CompressionConfig()
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+
+def init_train_state(lm: LM, key, cfg: TrainConfig) -> Dict[str, Any]:
+    params = lm.init(key)
+    state = {"params": params, "opt": init_opt_state(params)}
+    if cfg.compression.enable:
+        state["residual"] = init_residual(params)
+    return state
+
+
+def _split_micro(batch, n: int):
+    """(B, ...) -> (n, B/n, ...) for scan-based accumulation."""
+    def r(x):
+        b = x.shape[0]
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(lm: LM, cfg: TrainConfig) -> Callable:
+    dtype = cfg.compute_dtype
+
+    def loss_fn(params, micro):
+        return lm.loss_fn(params, micro, dtype=dtype, remat=cfg.remat)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if cfg.microbatches > 1:
+            micro = _split_micro(batch, cfg.microbatches)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, loss_sum), _ = jax.lax.scan(acc_body, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / cfg.microbatches, g_sum)
+            loss = loss_sum / cfg.microbatches
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+
+        if cfg.compression.enable:
+            grads, residual = compress_grads(
+                grads, state["residual"], cfg.compression
+            )
+
+        params2, opt2, om = adamw_update(cfg.opt, params, grads, state["opt"])
+        new_state = {"params": params2, "opt": opt2}
+        if cfg.compression.enable:
+            new_state["residual"] = residual
+        metrics = {"loss": loss, **om}
+        return new_state, metrics
+
+    return train_step

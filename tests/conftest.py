@@ -1,0 +1,39 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on ONE device;
+only launch/dryrun.py (and the subprocess-based SPMD tests) use the
+512/8-device placeholder worlds."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_spmd_subprocess(code: str, devices: int = 8, timeout: int = 300):
+    """Run a snippet in a fresh interpreter with a forced device count
+    (jax pins the device world at first init, so SPMD tests need their
+    own process)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"SPMD subprocess failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+        )
+    return proc.stdout
