@@ -1,0 +1,138 @@
+"""Micro-benchmark: old per-window-loop packing vs the vectorized packer
+in ``core/packing.py``.
+
+The schedule is synthesized directly (random per-window color counts,
+lane-structured columns) so the benchmark isolates *packing* cost — no
+edge coloring runs.  The vectorized path must be >=5x faster at >=10k
+windows (ISSUE 1 acceptance); results are recorded to BENCH_pack.json.
+
+Usage:
+    PYTHONPATH=src python benchmarks/pack_bench.py [--windows 1000 10000 30000]
+        [--l 64] [--iters 3] [--out BENCH_pack.json]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.formats import GustSchedule
+from repro.core.packing import pack_blocks
+
+
+def synth_schedule(num_windows: int, l: int, c_mean: int = 4, seed: int = 0
+                   ) -> GustSchedule:
+    """Fabricate a valid-looking scheduled format without running the
+    scheduler: random colors per window, straight-lane columns."""
+    rng = np.random.default_rng(seed)
+    cpw = rng.integers(1, 2 * c_mean, num_windows).astype(np.int64)
+    cpw[rng.random(num_windows) < 0.05] = 0  # some empty windows
+    window_starts = np.zeros(num_windows + 1, dtype=np.int64)
+    np.cumsum(cpw, out=window_starts[1:])
+    c_total = int(window_starts[-1])
+    m = num_windows * l
+    m_sch = rng.standard_normal((max(c_total, 1), l)).astype(np.float32)
+    row_sch = rng.integers(0, l, (max(c_total, 1), l)).astype(np.int32)
+    seg = rng.integers(0, 4, (max(c_total, 1), l)).astype(np.int32)
+    col_sch = seg * l + np.arange(l, dtype=np.int32)[None, :]
+    valid = np.ones((max(c_total, 1), l), dtype=bool)
+    return GustSchedule(
+        l=l, shape=(m, 4 * l), nnz=c_total * l, m_sch=m_sch, row_sch=row_sch,
+        col_sch=col_sch, window_starts=window_starts,
+        row_perm=np.arange(m, dtype=np.int64), valid=valid,
+    )
+
+
+def pack_loop_old(sched: GustSchedule, c_blk: int = 8):
+    """The seed implementation: Python loop over windows + lane-structure
+    check on the padded blocks.  Both sides of the comparison build the
+    same host numpy blocks (the jnp device transfer is identical in both
+    pipelines and excluded)."""
+    l, W = sched.l, sched.num_windows
+    cpw = np.diff(sched.window_starts)
+    c_max = int(cpw.max()) if W else 1
+    c_pad = max(-(-c_max // c_blk) * c_blk, c_blk)
+    m_b = np.zeros((W, c_pad, l), dtype=np.float32)
+    r_b = np.zeros((W, c_pad, l), dtype=np.int32)
+    c_b = np.tile(np.arange(l, dtype=np.int32), (W, c_pad, 1))
+    for w in range(W):
+        s, t = sched.window_starts[w], sched.window_starts[w + 1]
+        m_b[w, : t - s] = sched.m_sch[s:t]
+        r_b[w, : t - s] = sched.row_sch[s:t]
+        c_b[w, : t - s] = sched.col_sch[s:t]
+    lane = np.arange(l, dtype=np.int32)[None, None, :]
+    off = c_b % l
+    fusable = bool(np.all((off == lane) | (off == l - 1 - lane)))
+    return m_b, r_b, c_b, fusable
+
+
+def bench(fn, iters: int) -> float:
+    fn()  # warmup: page-fault the allocator pools once
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--windows", type=int, nargs="+",
+                    default=[1_000, 10_000, 30_000])
+    ap.add_argument("--l", type=int, default=8,
+                    help="GUST length; the many-small-windows regime "
+                    "(ultra-sparse matrices, the paper's target) is where "
+                    "the interpreted loop hurts most")
+    ap.add_argument("--c-mean", type=int, default=4,
+                    help="mean colors per window of the synthetic schedule")
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--min-speedup", type=float, default=5.0,
+                    help="fail below this speedup at >=10k windows; lower "
+                    "it on noisy shared runners (0 = report-only)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_pack.json"))
+    args = ap.parse_args()
+
+    results = []
+    for w in args.windows:
+        sched = synth_schedule(w, args.l, c_mean=args.c_mean)
+        # bit-identity guard: the vectorized packer must reproduce the loop
+        m_o, r_o, c_o, fus_o = pack_loop_old(sched)
+        m_v, c_v, r_v, c_pad, fus_v = pack_blocks(sched)
+        assert fus_o == fus_v and c_pad == m_o.shape[1]
+        assert np.array_equal(m_v, m_o.reshape(-1, args.l))
+        assert np.array_equal(r_v, r_o.reshape(-1, args.l))
+        assert np.array_equal(c_v, c_o.reshape(-1, args.l))
+        t_old = bench(lambda: pack_loop_old(sched), args.iters)
+        t_new = bench(lambda: pack_blocks(sched), args.iters)
+        rec = {
+            "windows": w,
+            "l": args.l,
+            "c_mean": args.c_mean,
+            "c_total": int(sched.total_colors),
+            "old_loop_s": round(t_old, 5),
+            "vectorized_s": round(t_new, 5),
+            "speedup": round(t_old / t_new, 2),
+        }
+        results.append(rec)
+        print(f"W={w:>7}  old={t_old*1e3:9.2f} ms  "
+              f"vec={t_new*1e3:9.2f} ms  speedup={rec['speedup']:.1f}x")
+
+    payload = {"bench": "pack_schedule old-loop vs vectorized",
+               "results": results}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print("wrote", args.out)
+    big = [r for r in results if r["windows"] >= 10_000]
+    if big and min(r["speedup"] for r in big) < args.min_speedup:
+        raise SystemExit(
+            f"FAIL: <{args.min_speedup}x speedup at >=10k windows"
+        )
+
+
+if __name__ == "__main__":
+    main()

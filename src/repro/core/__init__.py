@@ -2,6 +2,13 @@
 
 from .formats import COOMatrix, GustSchedule, coo_from_dense, dense_from_coo
 from .scheduler import schedule
+from .packing import (
+    PackedSchedule,
+    ScheduleCache,
+    pack_schedule,
+    packed_spec,
+    schedule_packed,
+)
 from .spmv import spmv, spmv_scheduled, spmm_scheduled, distributed_spmv
 from .bounds import (
     expected_colors_bound,
@@ -16,6 +23,11 @@ __all__ = [
     "coo_from_dense",
     "dense_from_coo",
     "schedule",
+    "PackedSchedule",
+    "ScheduleCache",
+    "pack_schedule",
+    "packed_spec",
+    "schedule_packed",
     "spmv",
     "spmv_scheduled",
     "spmm_scheduled",

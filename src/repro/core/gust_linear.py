@@ -20,8 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .formats import COOMatrix
-from .scheduler import schedule
-from .spmv import spmm_scheduled
+from .packing import schedule_packed
 
 __all__ = ["SparsityConfig", "GustLinear", "prune_by_magnitude"]
 
@@ -54,6 +53,12 @@ class GustLinear:
     Not a pytree — this is a *serving* artifact built once from trained
     weights (analogous to a compiled engine).  ``__call__`` takes
     ``x: (B, n)`` and returns ``(B, m)``.
+
+    NOTE: construction goes through the process-global content-keyed
+    :class:`~repro.core.packing.ScheduleCache`, so the schedule/packed
+    arrays outlive this object (bounded by the cache's LRU size).
+    Rebuilding a GustLinear over identical weights is then free; call
+    :func:`repro.core.packing.clear_cache` to release the memory.
     """
 
     def __init__(self, w: np.ndarray, cfg: SparsityConfig):
@@ -70,7 +75,10 @@ class GustLinear:
             w_pruned[rows, cols].astype(np.float32),
         )
         self.nnz = coo.nnz
-        self.sched = schedule(
+        # Schedule AND pack once, at construction (content-keyed cache:
+        # rebuilding a GustLinear over identical weights is free).  The
+        # packed form is what both execution paths consume.
+        self.sched, self.packed = schedule_packed(
             coo, cfg.gust_length, load_balance=cfg.load_balance, method=cfg.method
         )
 
@@ -88,10 +96,7 @@ class GustLinear:
             squeeze = True
         else:
             squeeze = False
-        if self.cfg.use_kernel:
-            from repro.kernels import ops as kops
+        from repro.kernels import ops as kops
 
-            y = kops.gust_spmm(self.sched, x.T).T
-        else:
-            y = spmm_scheduled(self.sched, x.T).T
+        y = kops.gust_spmm(self.packed, x.T, use_kernel=self.cfg.use_kernel).T
         return y[0] if squeeze else y

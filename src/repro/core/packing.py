@@ -1,0 +1,441 @@
+"""Canonical ragged→packed conversion for the GUST scheduled format.
+
+This module is the single home of the packed scheduled format: every
+execution path (pure-jnp oracle, Pallas kernel, distributed row-window
+split, LM serving) consumes :class:`PackedSchedule` built here.  The
+conversion is fully vectorized — one scatter by ``window_starts``-derived
+global indices instead of a Python loop over windows — so packing is
+O(nnz) numpy work even for schedules with 10⁵ windows.
+
+Scheduled format lifecycle
+--------------------------
+
+1. **Schedule (ragged).**  ``core.scheduler.schedule`` edge-colors the
+   bipartite window graphs and emits a :class:`~repro.core.formats.
+   GustSchedule`: three ``(C_total, l)`` arrays plus the per-window color
+   prefix ``window_starts``.  Window ``w`` owns the global cycle rows
+   ``window_starts[w]:window_starts[w+1]`` — a *ragged* layout (windows
+   have different color counts).  Computed once per matrix; reused for
+   every vector (paper §3.3/§5.3 amortization).
+
+2. **Pack (fixed-shape).**  :func:`pack_schedule` pads every window to a
+   common ``C_pad`` (max window colors rounded up to ``c_blk``) and
+   reshapes to ``(W * C_pad, l)`` blocks — a JAX pytree of plain arrays
+   that can be jit-ed over, sharded, donated, stacked across layers, and
+   described by ``ShapeDtypeStruct`` (:func:`packed_spec`) without running
+   the scheduler.
+
+   Packed-format invariants (padding slots):
+     * ``m_blk``  is ``0``      — padding contributes nothing to any sum;
+     * ``col_blk`` holds the slot's own lane index — the vector gather
+       stays in-bounds and preserves the straight-lane structure the
+       fused kernel's gather relies on (``col % l ∈ {lane, l-1-lane}``);
+     * ``row_blk`` is ``0``     — safe because the value is 0.
+   Any transformation of a packed schedule (``repad_to``, layer stacking,
+   window padding for the distributed split) must preserve these.
+
+3. **Execute.**  ``kernels.ops.gust_spmm`` (Pallas or XLA),
+   ``core.spmv.distributed_spmv`` (k parallel length-l GUSTs), and
+   ``serving.gust_serve.decode_step_gust`` all stream the packed blocks.
+   Serving stacks per-layer packs along a leading reps axis after
+   :meth:`PackedSchedule.repad_to` equalizes ``C_pad``; the leaves/meta
+   codec (:func:`packed_leaves` / :func:`packed_meta` /
+   :func:`packed_from_leaves`) is the one wire format shared by
+   ``gustify`` and the multi-pod dry-run specs.
+
+4. **Cache.**  :class:`ScheduleCache` (module-level instance behind
+   :func:`schedule_packed`) keys schedule+pack results on matrix
+   *content*, so serving/benchmark paths that re-derive the same pruned
+   matrix pay for scheduling exactly once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import COOMatrix, GustSchedule
+
+__all__ = [
+    "PackedSchedule",
+    "pack_blocks",
+    "pack_schedule",
+    "packed_spec",
+    "window_ids",
+    "packed_leaves",
+    "packed_meta",
+    "packed_from_leaves",
+    "stacked_leaf_specs",
+    "ScheduleCache",
+    "schedule_packed",
+    "default_cache",
+    "clear_cache",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedSchedule:
+    """Fixed-shape GUST scheduled format (pytree).
+
+    Arrays (leaves):
+      m_blk:   (W * C_pad, l) values; 0.0 in padding slots.
+      col_blk: (W * C_pad, l) int32 original column index; padding slots
+               hold the slot's own lane (in-bounds, straight layout).
+      row_blk: (W * C_pad, l) int32 adder index; 0 in padding slots.
+      row_perm:(W * l,) int32 — original row of each scheduled row position
+               (identity-extended past m).
+
+    Static (aux):
+      l, num_windows, c_pad, shape=(m, n), fusable (lane structure verified
+      for the fused in-kernel gather).
+    """
+
+    m_blk: jnp.ndarray
+    col_blk: jnp.ndarray
+    row_blk: jnp.ndarray
+    row_perm: jnp.ndarray
+    l: int
+    num_windows: int
+    c_pad: int
+    shape: Tuple[int, int]
+    fusable: bool
+
+    def tree_flatten(self):
+        leaves = (self.m_blk, self.col_blk, self.row_blk, self.row_perm)
+        aux = (self.l, self.num_windows, self.c_pad, self.shape, self.fusable)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def seg_count(self) -> int:
+        return -(-self.shape[1] // self.l)
+
+    @property
+    def stream_bytes(self) -> int:
+        """HBM bytes of the scheduled stream (value f32 + col i32 + row i32)."""
+        return int(self.m_blk.size) * (4 + 4 + 4)
+
+    def repad_to(self, c_pad: int) -> "PackedSchedule":
+        """Grow the per-window color padding to ``c_pad`` slots.
+
+        Preserves every leaf dtype (a compact int16 stream stays int16)
+        and the packed-format invariants: new value slots are 0, new
+        column slots gather the slot's own lane, new row slots are 0.
+        Used to equalize C_pad across stacked layers in serving.
+        """
+        if c_pad == self.c_pad:
+            return self
+        if c_pad < self.c_pad:
+            raise ValueError(
+                f"cannot shrink c_pad {self.c_pad} -> {c_pad} (real colors "
+                "may live in the dropped slots)"
+            )
+        W, l, extra = self.num_windows, self.l, c_pad - self.c_pad
+
+        def grow(a, pad_row):
+            a3 = jnp.asarray(a).reshape(W, self.c_pad, l)
+            pad = jnp.broadcast_to(
+                jnp.asarray(pad_row, a3.dtype)[None, None, :], (W, extra, l)
+            )
+            return jnp.concatenate([a3, pad], axis=1).reshape(W * c_pad, l)
+
+        return PackedSchedule(
+            m_blk=grow(self.m_blk, np.zeros(l, np.float32)),
+            col_blk=grow(self.col_blk, np.arange(l, dtype=np.int32)),
+            row_blk=grow(self.row_blk, np.zeros(l, np.int32)),
+            row_perm=self.row_perm,
+            l=l,
+            num_windows=W,
+            c_pad=c_pad,
+            shape=self.shape,
+            fusable=self.fusable,
+        )
+
+
+def window_ids(sched: GustSchedule) -> np.ndarray:
+    """Window id of each global schedule cycle, shape (max(C_total, 1),)."""
+    wid = np.zeros(max(sched.total_colors, 1), dtype=np.int32)
+    ids = np.repeat(
+        np.arange(sched.num_windows, dtype=np.int32), sched.colors_per_window
+    )
+    wid[: ids.shape[0]] = ids
+    return wid
+
+
+def pack_blocks(
+    sched: GustSchedule, c_blk: int = 8
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int, bool]:
+    """Vectorized core of the ragged→packed conversion (host numpy).
+
+    Returns ``(m_b, c_b, r_b, c_pad, fusable)`` with the three blocks of
+    shape ``(W * c_pad, l)``.  Each real cycle row scatters to global
+    destination ``window * C_pad + local_cycle`` in one fancy-indexed
+    assignment — O(nnz) instead of a Python loop over windows.
+    """
+    l, W = sched.l, sched.num_windows
+    ws = np.asarray(sched.window_starts)
+    cpw = np.diff(ws)
+    c_max = int(cpw.max()) if W else 1
+    c_pad = max(-(-c_max // c_blk) * c_blk, c_blk)
+    c_total = int(ws[-1]) if W else 0
+
+    lane = np.arange(l, dtype=np.int32)
+    # One backing allocation for all three blocks (f32 and i32 share the
+    # itemsize, so the value plane is a reinterpreting view) — noticeably
+    # cheaper than three separate page-faulted buffers at large W.
+    buf = np.zeros((3, W * c_pad, l), dtype=np.int32)
+    m_b = buf[0].view(np.float32)
+    r_b = buf[1]
+    c_b = buf[2]
+    c_b[:] = lane  # padding slots gather v[lane] (packed-format invariant)
+    if c_total:
+        wid = np.repeat(np.arange(W, dtype=np.int64), cpw)
+        dest = wid * c_pad + (np.arange(c_total, dtype=np.int64) - ws[wid])
+        m_b[dest] = sched.m_sch[:c_total]
+        r_b[dest] = sched.row_sch[:c_total]
+        c_b[dest] = sched.col_sch[:c_total]
+
+    # Verify the lane structure the fused gather relies on: every slot's
+    # column offset is its lane or the reversed lane.  Checking the ragged
+    # source is equivalent to checking the padded blocks (padding slots are
+    # lane-valued by construction) and touches ~C_pad/C̄ fewer elements.
+    src = sched.col_sch
+    off = (src & (l - 1)) if l & (l - 1) == 0 else (src % l)
+    fusable = bool(np.all((off == lane[None, :]) | (off == (l - 1 - lane)[None, :])))
+    return m_b, c_b, r_b, c_pad, fusable
+
+
+def pack_schedule(
+    sched: GustSchedule, c_blk: int = 8, value_dtype=jnp.float32,
+    index_dtype=jnp.int32,
+) -> PackedSchedule:
+    """Pad the ragged per-window schedule to (W, C_pad, l) blocks.
+
+    C_pad = max window colors, rounded up to a multiple of ``c_blk``.  The
+    padding cost is real on hardware too (lanes idle while the heaviest
+    window drains) and is already counted by the cycle model through Eq. 1.
+    """
+    l, W = sched.l, sched.num_windows
+    m, n = sched.shape
+    m_b, c_b, r_b, c_pad, fusable = pack_blocks(sched, c_blk)
+
+    row_perm = np.arange(W * l, dtype=np.int32)
+    row_perm[: sched.row_perm.shape[0]] = sched.row_perm
+
+    return PackedSchedule(
+        m_blk=jnp.asarray(m_b, value_dtype),
+        col_blk=jnp.asarray(c_b, index_dtype),
+        row_blk=jnp.asarray(r_b, index_dtype),
+        row_perm=jnp.asarray(row_perm),
+        l=l,
+        num_windows=W,
+        c_pad=c_pad,
+        shape=(m, n),
+        fusable=fusable,
+    )
+
+
+def packed_spec(
+    m: int,
+    n: int,
+    l: int,
+    c_pad: int,
+    value_dtype=jnp.float32,
+    index_dtype=jnp.int32,
+) -> PackedSchedule:
+    """ShapeDtypeStruct stand-in for a PackedSchedule — used by the dry-run
+    (no allocation).  ``c_pad`` is typically sized from the Eq. 9 bound:
+    ``expected_colors_bound(n, density, l)`` rounded up."""
+    W = max(-(-m // l), 1)
+    sds = jax.ShapeDtypeStruct
+    return PackedSchedule(
+        m_blk=sds((W * c_pad, l), value_dtype),
+        col_blk=sds((W * c_pad, l), index_dtype),
+        row_blk=sds((W * c_pad, l), index_dtype),
+        row_perm=sds((W * l,), jnp.int32),
+        l=l,
+        num_windows=W,
+        c_pad=c_pad,
+        shape=(m, n),
+        fusable=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Leaves/meta codec — the one wire format for serving stacks and dry-runs.
+# ---------------------------------------------------------------------------
+
+
+def packed_leaves(p: PackedSchedule) -> Dict:
+    """Array leaves of a packed schedule as a plain dict (jit-able pytree)."""
+    return {
+        "m_blk": p.m_blk,
+        "col_blk": p.col_blk,
+        "row_blk": p.row_blk,
+        "row_perm": p.row_perm,
+    }
+
+
+def packed_meta(p: PackedSchedule) -> Tuple:
+    """Static (non-array) part: ``(l, num_windows, c_pad, shape, fusable)``."""
+    return (p.l, p.num_windows, p.c_pad, p.shape, p.fusable)
+
+
+def packed_from_leaves(leaves: Dict, meta: Tuple) -> PackedSchedule:
+    """Inverse of the codec: rebuild a PackedSchedule from leaves + meta."""
+    l, w, c_pad, shape, fusable = meta
+    return PackedSchedule(
+        m_blk=leaves["m_blk"],
+        col_blk=leaves["col_blk"],
+        row_blk=leaves["row_blk"],
+        row_perm=leaves["row_perm"],
+        l=l, num_windows=w, c_pad=c_pad, shape=shape, fusable=fusable,
+    )
+
+
+def stacked_leaf_specs(proto: PackedSchedule, reps: int) -> Dict:
+    """ShapeDtypeStruct leaves of ``reps`` layer packs stacked on axis 0.
+
+    Works for both real-array and spec prototypes (only .shape/.dtype are
+    read) — this is how ``dryrun_specs`` sizes the serving stack without
+    running the scheduler."""
+    return {
+        k: jax.ShapeDtypeStruct((reps, *v.shape), v.dtype)
+        for k, v in packed_leaves(proto).items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Content-keyed schedule cache.
+# ---------------------------------------------------------------------------
+
+
+class ScheduleCache:
+    """LRU cache of ``schedule(...)`` / ``pack_schedule(...)`` results,
+    keyed by matrix *content* (sha1 of shape + COO triples) and the
+    scheduling/packing parameters.
+
+    The paper's amortization argument (§5.3) assumes the schedule is
+    computed once per matrix; this cache enforces it across independent
+    call sites (serving gustify, GustLinear, benchmarks) that re-derive
+    the same pruned matrix.
+
+    ``maxsize`` must cover a whole model conversion for the reuse to
+    materialize: gustify inserts ``reps * len(mats)`` schedule entries
+    plus as many packed entries (2 * 32 * 3 = 192 for a 32-layer stack),
+    so the default is sized above that.  Entries hold device arrays —
+    tens of MB each at LLM scale — for the process lifetime; call
+    :func:`clear_cache` after a one-shot conversion to release them."""
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = maxsize
+        self._store: "OrderedDict[Tuple, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def matrix_key(coo: COOMatrix) -> str:
+        h = hashlib.sha1()
+        h.update(repr(coo.shape).encode())
+        for a in (coo.rows, coo.cols, coo.vals):
+            arr = np.ascontiguousarray(a)
+            h.update(str(arr.dtype).encode())
+            h.update(arr.tobytes())
+        return h.hexdigest()
+
+    def _get(self, key: Tuple, build):
+        if key in self._store:
+            self.hits += 1
+            self._store.move_to_end(key)
+            return self._store[key]
+        self.misses += 1
+        val = build()
+        self._store[key] = val
+        while len(self._store) > self.maxsize:
+            self._store.popitem(last=False)
+        return val
+
+    def _schedule_for_key(self, mk: str, coo: COOMatrix, l: int,
+                          load_balance: bool, method: str) -> GustSchedule:
+        from .scheduler import schedule as _schedule
+
+        key = ("sched", mk, l, load_balance, method)
+        return self._get(
+            key,
+            lambda: _schedule(coo, l, load_balance=load_balance, method=method),
+        )
+
+    def schedule(
+        self, coo: COOMatrix, l: int, *, load_balance: bool = True,
+        method: str = "fast",
+    ) -> GustSchedule:
+        return self._schedule_for_key(
+            self.matrix_key(coo), coo, l, load_balance, method
+        )
+
+    def packed(
+        self, coo: COOMatrix, l: int, *, load_balance: bool = True,
+        method: str = "fast", c_blk: int = 8, value_dtype=jnp.float32,
+        index_dtype=jnp.int32,
+    ) -> Tuple[GustSchedule, PackedSchedule]:
+        mk = self.matrix_key(coo)  # O(nnz) hash — computed once per call
+        sched = self._schedule_for_key(mk, coo, l, load_balance, method)
+        key = (
+            "packed", mk, l, load_balance, method, c_blk,
+            jnp.dtype(value_dtype).name, jnp.dtype(index_dtype).name,
+        )
+        packed = self._get(
+            key,
+            lambda: pack_schedule(
+                sched, c_blk=c_blk, value_dtype=value_dtype,
+                index_dtype=index_dtype,
+            ),
+        )
+        return sched, packed
+
+    def clear(self):
+        self._store.clear()
+        self.hits = self.misses = 0
+
+
+default_cache = ScheduleCache()
+
+
+def clear_cache() -> None:
+    """Drop every cached schedule/packed entry of the module-level cache.
+
+    Cached entries hold device arrays (tens of MB per LLM-scale matrix, up
+    to ``maxsize`` of them) for the process lifetime; call this after a
+    one-shot conversion (e.g. ``gustify`` at weight-load time) if the
+    memory matters more than re-schedule speed."""
+    default_cache.clear()
+
+
+def schedule_packed(
+    coo: COOMatrix, l: int, *, load_balance: bool = True, method: str = "fast",
+    c_blk: int = 8, value_dtype=jnp.float32, index_dtype=jnp.int32,
+    cache: Optional[ScheduleCache] = default_cache,
+) -> Tuple[GustSchedule, PackedSchedule]:
+    """schedule + pack in one call, served from ``cache`` (content-keyed;
+    pass ``cache=None`` to bypass)."""
+    if cache is None:
+        from .scheduler import schedule as _schedule
+
+        sched = _schedule(coo, l, load_balance=load_balance, method=method)
+        return sched, pack_schedule(
+            sched, c_blk=c_blk, value_dtype=value_dtype, index_dtype=index_dtype
+        )
+    return cache.packed(
+        coo, l, load_balance=load_balance, method=method, c_blk=c_blk,
+        value_dtype=value_dtype, index_dtype=index_dtype,
+    )

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .formats import COOMatrix, GustSchedule
+from .packing import pack_schedule, window_ids
 
 __all__ = [
     "spmv_dense_ref",
@@ -35,16 +36,6 @@ __all__ = [
 def spmv_dense_ref(dense: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
     """Oracle: plain dense matvec."""
     return dense @ v
-
-
-def _window_ids(sched: GustSchedule) -> np.ndarray:
-    """Window id of each global schedule cycle, shape (C_total,)."""
-    c_total = max(sched.total_colors, 1)
-    wid = np.zeros(c_total, dtype=np.int32)
-    ws = sched.window_starts
-    for w in range(sched.num_windows):
-        wid[ws[w] : ws[w + 1]] = w
-    return wid
 
 
 @functools.partial(jax.jit, static_argnames=("m", "l", "num_windows"))
@@ -84,7 +75,7 @@ def spmv_scheduled(sched: GustSchedule, v: jnp.ndarray) -> jnp.ndarray:
         jnp.asarray(sched.m_sch),
         jnp.asarray(sched.row_sch),
         jnp.asarray(sched.col_sch),
-        jnp.asarray(_window_ids(sched)),
+        jnp.asarray(window_ids(sched)),
         jnp.asarray(sched.row_perm),
         v,
         m=m,
@@ -112,10 +103,17 @@ def spmv(
     load_balance: bool = True,
     method: str = "fast",
 ) -> jnp.ndarray:
-    """Convenience: schedule + execute in one call (schedule not cached)."""
-    from .scheduler import schedule
+    """Convenience: schedule + execute in one call.  The schedule is served
+    from the process-global content-keyed
+    :class:`~repro.core.packing.ScheduleCache`, so repeated calls on the
+    same matrix pay for scheduling once — and the schedule stays resident
+    (LRU-bounded) after this call returns; use
+    :func:`repro.core.packing.clear_cache` to release it."""
+    from .packing import default_cache
 
-    return spmv_scheduled(schedule(coo, l, load_balance=load_balance, method=method), v)
+    return spmv_scheduled(
+        default_cache.schedule(coo, l, load_balance=load_balance, method=method), v
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -139,24 +137,34 @@ def distributed_spmv(
     (C_w = 0 contributes zero cycles on real hardware; here zero slots)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.distributed.collectives import shard_map
+
     n_dev = mesh.shape[axis]
     m, n = sched.shape
     l, W = sched.l, sched.num_windows
-    cpw = np.diff(sched.window_starts)
-    c_max = int(cpw.max()) if W else 1
     W_pad = -(-W // n_dev) * n_dev
 
-    # Re-pack the ragged per-window schedule into (W_pad, c_max, l) blocks.
-    def pack(arr, fill):
-        out = np.full((W_pad, max(c_max, 1)) + arr.shape[1:], fill, arr.dtype)
-        for w in range(W):
-            s, t = sched.window_starts[w], sched.window_starts[w + 1]
-            out[w, : t - s] = arr[s:t]
-        return out
+    # Canonical packer (c_blk=1 -> C_pad == max window colors), then pad the
+    # window axis to a multiple of the device count.  Padded slots keep the
+    # packed-format invariants: values 0, columns gather the slot's lane.
+    packed = pack_schedule(sched, c_blk=1)
+    c_pad = packed.c_pad
 
-    m_b = pack(sched.m_sch, 0.0)
-    r_b = pack(sched.row_sch, 0)
-    c_b = pack(sched.col_sch, 0)
+    def blocks(a, lane_fill=False):
+        a3 = jnp.reshape(a, (W, c_pad, l))
+        if W_pad == W:
+            return a3
+        if lane_fill:
+            pad = jnp.broadcast_to(
+                jnp.arange(l, dtype=a3.dtype)[None, None, :],
+                (W_pad - W, c_pad, l),
+            )
+            return jnp.concatenate([a3, pad], axis=0)
+        return jnp.pad(a3, ((0, W_pad - W), (0, 0), (0, 0)))
+
+    m_b = blocks(packed.m_blk)
+    r_b = blocks(packed.row_blk)
+    c_b = blocks(packed.col_blk, lane_fill=True)
 
     def local(m_blk, r_blk, c_blk, vec):
         # (W_loc, c_max, l) -> per-window segment sum -> (W_loc * l,)
@@ -167,12 +175,12 @@ def distributed_spmv(
 
     spec_in = P(axis)  # shard leading window dim
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             local,
             mesh=mesh,
             in_specs=(spec_in, spec_in, spec_in, P()),
             out_specs=spec_in,
         )
     )
-    y_sorted = fn(jnp.asarray(m_b), jnp.asarray(r_b), jnp.asarray(c_b), v)[: m]
+    y_sorted = fn(m_b, r_b, c_b, v)[: m]
     return jnp.zeros((m,), jnp.float32).at[jnp.asarray(sched.row_perm)].set(y_sorted[:m])

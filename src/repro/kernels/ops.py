@@ -1,12 +1,11 @@
 """jit'd public wrappers around the GUST Pallas kernels.
 
-``pack_schedule`` turns a host-side :class:`~repro.core.formats.GustSchedule`
-into a :class:`PackedSchedule` — a JAX pytree of fixed-shape arrays (the
-ragged per-window color counts padded to a common ``C_pad``).  Because it
-is a pytree of plain arrays it can be sharded, donated, checkpointed, and
-— crucially for the multi-pod dry-run — described by ShapeDtypeStructs
-sized from the paper's Eq. 9/10 expected-color bound without ever running
-the scheduler.
+The packed scheduled format itself lives in :mod:`repro.core.packing` —
+the single home of the ragged→packed conversion (vectorized packing,
+repadding, the leaves/meta codec, and the content-keyed schedule cache).
+``PackedSchedule`` / ``pack_schedule`` / ``packed_spec`` are re-exported
+here for compatibility; this module only owns the *execution* entry
+point.
 
 ``gust_spmm`` executes ``y = M @ x`` for ``x: (n, B)`` through either the
 fused Pallas kernel (``use_kernel=True``) or the pure-XLA packed path
@@ -16,139 +15,18 @@ and as the kernel oracle).
 
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.formats import GustSchedule
+from repro.core.packing import PackedSchedule, pack_schedule, packed_spec
 
 from .gust_spmv import make_gust_spmv
 from .ref import gust_spmv_ref
 
 __all__ = ["PackedSchedule", "pack_schedule", "gust_spmm", "packed_spec"]
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class PackedSchedule:
-    """Fixed-shape GUST scheduled format (pytree).
-
-    Arrays (leaves):
-      m_blk:   (W * C_pad, l) values; 0.0 in padding slots.
-      col_blk: (W * C_pad, l) int32 original column index; padding slots
-               hold the slot's own lane (in-bounds, straight layout).
-      row_blk: (W * C_pad, l) int32 adder index; 0 in padding slots.
-      row_perm:(W * l,) int32 — original row of each scheduled row position
-               (identity-extended past m).
-
-    Static (aux):
-      l, num_windows, c_pad, shape=(m, n), fusable (lane structure verified
-      for the fused in-kernel gather).
-    """
-
-    m_blk: jnp.ndarray
-    col_blk: jnp.ndarray
-    row_blk: jnp.ndarray
-    row_perm: jnp.ndarray
-    l: int
-    num_windows: int
-    c_pad: int
-    shape: Tuple[int, int]
-    fusable: bool
-
-    def tree_flatten(self):
-        leaves = (self.m_blk, self.col_blk, self.row_blk, self.row_perm)
-        aux = (self.l, self.num_windows, self.c_pad, self.shape, self.fusable)
-        return leaves, aux
-
-    @classmethod
-    def tree_unflatten(cls, aux, leaves):
-        return cls(*leaves, *aux)
-
-    @property
-    def seg_count(self) -> int:
-        return -(-self.shape[1] // self.l)
-
-    @property
-    def stream_bytes(self) -> int:
-        """HBM bytes of the scheduled stream (value f32 + col i32 + row i32)."""
-        return int(self.m_blk.size) * (4 + 4 + 4)
-
-
-def pack_schedule(
-    sched: GustSchedule, c_blk: int = 8, value_dtype=jnp.float32,
-    index_dtype=jnp.int32,
-) -> PackedSchedule:
-    """Pad the ragged per-window schedule to (W, C_pad, l) blocks.
-
-    C_pad = max window colors, rounded up to a multiple of ``c_blk``.  The
-    padding cost is real on hardware too (lanes idle while the heaviest
-    window drains) and is already counted by the cycle model through Eq. 1.
-    """
-    l, W = sched.l, sched.num_windows
-    m, n = sched.shape
-    cpw = np.diff(sched.window_starts)
-    c_max = int(cpw.max()) if W else 1
-    c_pad = max(-(-c_max // c_blk) * c_blk, c_blk)
-
-    m_b = np.zeros((W, c_pad, l), dtype=np.float32)
-    r_b = np.zeros((W, c_pad, l), dtype=np.int32)
-    c_b = np.tile(np.arange(l, dtype=np.int32), (W, c_pad, 1))
-    for w in range(W):
-        s, t = sched.window_starts[w], sched.window_starts[w + 1]
-        m_b[w, : t - s] = sched.m_sch[s:t]
-        r_b[w, : t - s] = sched.row_sch[s:t]
-        c_b[w, : t - s] = sched.col_sch[s:t]
-
-    # Verify the lane structure the fused gather relies on: every slot's
-    # column offset is its lane or the reversed lane.
-    lane = np.arange(l, dtype=np.int32)[None, None, :]
-    off = c_b % l
-    fusable = bool(np.all((off == lane) | (off == l - 1 - lane)))
-
-    row_perm = np.arange(W * l, dtype=np.int32)
-    row_perm[: sched.row_perm.shape[0]] = sched.row_perm
-
-    return PackedSchedule(
-        m_blk=jnp.asarray(m_b.reshape(W * c_pad, l), value_dtype),
-        col_blk=jnp.asarray(c_b.reshape(W * c_pad, l), index_dtype),
-        row_blk=jnp.asarray(r_b.reshape(W * c_pad, l), index_dtype),
-        row_perm=jnp.asarray(row_perm),
-        l=l,
-        num_windows=W,
-        c_pad=c_pad,
-        shape=(m, n),
-        fusable=fusable,
-    )
-
-
-def packed_spec(
-    m: int,
-    n: int,
-    l: int,
-    c_pad: int,
-    value_dtype=jnp.float32,
-) -> PackedSchedule:
-    """ShapeDtypeStruct stand-in for a PackedSchedule — used by the dry-run
-    (no allocation).  ``c_pad`` is typically sized from the Eq. 9 bound:
-    ``expected_colors_bound(n, density, l)`` rounded up."""
-    W = max(-(-m // l), 1)
-    sds = jax.ShapeDtypeStruct
-    return PackedSchedule(
-        m_blk=sds((W * c_pad, l), value_dtype),
-        col_blk=sds((W * c_pad, l), jnp.int32),
-        row_blk=sds((W * c_pad, l), jnp.int32),
-        row_perm=sds((W * l,), jnp.int32),
-        l=l,
-        num_windows=W,
-        c_pad=c_pad,
-        shape=(m, n),
-        fusable=True,
-    )
 
 
 def _prep_x(x: jnp.ndarray, n: int, l: int) -> Tuple[jnp.ndarray, jnp.ndarray]:

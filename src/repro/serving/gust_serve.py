@@ -9,9 +9,12 @@ changes").  ``decode_step_gust`` then mirrors the model's decode step but
 routes each layer's MLP matvecs through the GUST SpMV path.
 
 Layer stacking: packed schedules are padded to a *uniform* color count
-C_pad across layers so the leaves stack along the reps axis and the layer
-scan stays a single compact HLO — the GUST schedule is literally part of
-the serving checkpoint.
+C_pad across layers (``PackedSchedule.repad_to``) so the leaves stack
+along the reps axis and the layer scan stays a single compact HLO — the
+GUST schedule is literally part of the serving checkpoint.  The ragged→
+packed conversion, the leaves/meta codec shared with ``dryrun_specs``,
+and the content-keyed schedule cache all live in ``repro.core.packing``
+(see its module docstring for the format lifecycle and invariants).
 
 Applies to pattern-length-1 dense archs (phi3/yi/mistral-large/llava/
 gemma3 would need per-position stacks — gemma3 and the MoE archs run the
@@ -33,8 +36,15 @@ from repro.configs.base import ArchConfig
 from repro.core.bounds import expected_colors_bound
 from repro.core.formats import COOMatrix
 from repro.core.gust_linear import prune_by_magnitude
-from repro.core.scheduler import schedule
-from repro.kernels.ops import PackedSchedule, gust_spmm, pack_schedule, packed_spec
+from repro.core.packing import (
+    packed_from_leaves,
+    packed_leaves,
+    packed_meta,
+    packed_spec,
+    schedule_packed,
+    stacked_leaf_specs,
+)
+from repro.kernels.ops import gust_spmm
 from repro.models import transformer as T
 from repro.models.layers import apply_norm
 from repro.models.model_zoo import LM
@@ -65,15 +75,13 @@ class GustServeConfig:
         return jnp.int16 if self.compact else jnp.int32
 
 
-def _schedule_one(w: np.ndarray, cfg: GustServeConfig):
+def _prune_to_coo(w: np.ndarray, cfg: GustServeConfig) -> COOMatrix:
     """w: (d_in, d_out) layer weight; GUST computes y = M x with
     M = w^T (d_out, d_in)."""
     m = prune_by_magnitude(np.asarray(w, np.float32).T, cfg.density)
     rows, cols = np.nonzero(m)
-    coo = COOMatrix(m.shape, rows.astype(np.int64), cols.astype(np.int64),
-                    m[rows, cols].astype(np.float32))
-    return schedule(coo, cfg.gust_length, load_balance=cfg.load_balance,
-                    method=cfg.method)
+    return COOMatrix(m.shape, rows.astype(np.int64), cols.astype(np.int64),
+                     m[rows, cols].astype(np.float32))
 
 
 def gustify(lm: LM, params, cfg: GustServeConfig) -> Dict:
@@ -92,51 +100,25 @@ def gustify(lm: LM, params, cfg: GustServeConfig) -> Dict:
     out: Dict = {"mats": {}, "stats": {}}
     for name in cfg.mats:
         w_stack = np.asarray(mlp_params[name])  # (R, d_in, d_out)
-        packed_list = []
+        packs = []
         cycles = []
         for r in range(reps):
-            sched = _schedule_one(w_stack[r], cfg)
-            cycles.append(sched.cycles)
-            packed_list.append(sched)
-        packs = [
-            pack_schedule(s, c_blk=8, value_dtype=cfg.value_dtype,
-                          index_dtype=cfg.index_dtype)
-            for s in packed_list
-        ]
-        c_uniform = max(p.c_pad for p in packs)
-        # re-pad every layer to the uniform c_pad so leaves stack
-        def repad(p: PackedSchedule) -> PackedSchedule:
-            if p.c_pad == c_uniform:
-                return p
-            W, l = p.num_windows, p.l
-            def grow(a, fill):
-                a3 = np.asarray(a).reshape(W, p.c_pad, l)
-                if fill == "lane":  # padding gathers v_padded[lane]
-                    pad = np.tile(
-                        np.arange(l, dtype=np.int32),
-                        (W, c_uniform - p.c_pad, 1),
-                    )
-                else:
-                    pad = np.full((W, c_uniform - p.c_pad, l), fill, a3.dtype)
-                return np.concatenate([a3, pad], axis=1).reshape(W * c_uniform, l)
-            return PackedSchedule(
-                m_blk=jnp.asarray(grow(p.m_blk, 0.0)),
-                col_blk=jnp.asarray(grow(p.col_blk, "lane")),
-                row_blk=jnp.asarray(grow(p.row_blk, 0)),
-                row_perm=p.row_perm,
-                l=p.l, num_windows=W, c_pad=c_uniform, shape=p.shape,
-                fusable=p.fusable,
+            # schedule + pack through the content-keyed cache: re-gustifying
+            # the same weights (e.g. a compact re-export) reuses the schedule
+            sched, packed = schedule_packed(
+                _prune_to_coo(w_stack[r], cfg), cfg.gust_length,
+                load_balance=cfg.load_balance, method=cfg.method, c_blk=8,
+                value_dtype=cfg.value_dtype, index_dtype=cfg.index_dtype,
             )
-        packs = [repad(p) for p in packs]
-        leaves = {
-            "m_blk": jnp.stack([p.m_blk for p in packs]),
-            "col_blk": jnp.stack([p.col_blk for p in packs]),
-            "row_blk": jnp.stack([p.row_blk for p in packs]),
-            "row_perm": jnp.stack([p.row_perm for p in packs]),
-        }
-        proto = packs[0]
-        out["mats"][name] = {"leaves": leaves, "meta": (
-            proto.l, proto.num_windows, proto.c_pad, proto.shape, proto.fusable)}
+            cycles.append(sched.cycles)
+            packs.append(packed)
+        # re-pad every layer to the uniform c_pad so leaves stack
+        c_uniform = max(p.c_pad for p in packs)
+        packs = [p.repad_to(c_uniform) for p in packs]
+        leaves = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[packed_leaves(p) for p in packs]
+        )
+        out["mats"][name] = {"leaves": leaves, "meta": packed_meta(packs[0])}
         nnz = int(np.count_nonzero(np.asarray(leaves["m_blk"])))
         slots = leaves["m_blk"].size
         out["stats"][name] = {
@@ -147,17 +129,6 @@ def gustify(lm: LM, params, cfg: GustServeConfig) -> Dict:
     return out
 
 
-def _packed_from_slices(leaves_slice, meta) -> PackedSchedule:
-    l, w, c_pad, shape, fusable = meta
-    return PackedSchedule(
-        m_blk=leaves_slice["m_blk"],
-        col_blk=leaves_slice["col_blk"],
-        row_blk=leaves_slice["row_blk"],
-        row_perm=leaves_slice["row_perm"],
-        l=l, num_windows=w, c_pad=c_pad, shape=shape, fusable=fusable,
-    )
-
-
 def _gust_mlp(gust_slice, metas, x, mlp_kind: str, cfg: GustServeConfig):
     """x: (B, 1, d).  SwiGLU/GeGLU with every matvec through GUST."""
     b = x.shape[0]
@@ -165,7 +136,7 @@ def _gust_mlp(gust_slice, metas, x, mlp_kind: str, cfg: GustServeConfig):
     act = jax.nn.silu if mlp_kind == "swiglu" else jax.nn.gelu
 
     def mv(name, v):
-        packed = _packed_from_slices(gust_slice[name], metas[name])
+        packed = packed_from_leaves(gust_slice[name], metas[name])
         return gust_spmm(packed, v, use_kernel=cfg.use_kernel)
 
     g = act(mv("w_gate", xt).astype(jnp.float32))
@@ -214,20 +185,15 @@ def dryrun_specs(lm: LM, cfg: GustServeConfig) -> Dict:
     d = lm.cfg.d_model
     f = lm.cfg.d_ff
     l = cfg.gust_length
-    sds = jax.ShapeDtypeStruct
     out: Dict = {"mats": {}, "stats": {}}
     for name in cfg.mats:
         m, n = (d, f) if name == "w_down" else (f, d)
-        W = max(-(-m // l), 1)
         c = expected_colors_bound(n, cfg.density, l)
         c_pad = max(-(-int(np.ceil(c)) // 8) * 8, 8)
+        proto = packed_spec(m, n, l, c_pad, value_dtype=cfg.value_dtype,
+                            index_dtype=cfg.index_dtype)
         out["mats"][name] = {
-            "leaves": {
-                "m_blk": sds((reps, W * c_pad, l), cfg.value_dtype),
-                "col_blk": sds((reps, W * c_pad, l), cfg.index_dtype),
-                "row_blk": sds((reps, W * c_pad, l), cfg.index_dtype),
-                "row_perm": sds((reps, W * l), jnp.int32),
-            },
-            "meta": (l, W, c_pad, (m, n), True),
+            "leaves": stacked_leaf_specs(proto, reps),
+            "meta": packed_meta(proto),
         }
     return out

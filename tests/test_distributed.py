@@ -13,10 +13,10 @@ def test_ring_all_reduce_matches_psum():
     run_spmd_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from repro.distributed.collectives import ring_all_reduce
+from repro.distributed.collectives import ring_all_reduce, shard_map
 mesh = Mesh(np.array(jax.devices()).reshape(8), ("x",))
 x = jax.random.normal(jax.random.PRNGKey(0), (8, 37, 5))
-out = jax.jit(jax.shard_map(lambda xs: ring_all_reduce(xs[0], "x")[None],
+out = jax.jit(shard_map(lambda xs: ring_all_reduce(xs[0], "x")[None],
     mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
 ref = x.sum(0)
 assert np.abs(np.asarray(out) - np.asarray(ref)[None]).max() < 1e-4
@@ -28,14 +28,14 @@ def test_compressed_psum_error_feedback():
     run_spmd_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from repro.distributed.collectives import compressed_psum
+from repro.distributed.collectives import compressed_psum, shard_map
 mesh = Mesh(np.array(jax.devices()).reshape(8), ("x",))
 x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
 def f(xs):
     red, res = compressed_psum(xs[0], jnp.zeros_like(xs[0]), "x")
     return red[None], res[None]
-red, res = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("x"),
-                                 out_specs=(P("x"), P("x"))))(x)
+red, res = jax.jit(shard_map(f, mesh=mesh, in_specs=P("x"),
+                             out_specs=(P("x"), P("x"))))(x)
 ref = np.asarray(x.sum(0))
 rel = np.abs(np.asarray(red)[0] - ref).max() / np.abs(ref).max()
 assert rel < 0.05, rel

@@ -13,6 +13,9 @@ sparse matrices (hypothesis) asserting, for every colorer:
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -121,6 +121,24 @@ def test_gust_linear_vs_dense():
     assert gl2.nnz <= int(w.size * 0.25) + 1
 
 
+def test_gust_linear_use_kernel_regression():
+    """Regression: use_kernel=True used to pass the ragged GustSchedule to
+    kops.gust_spmm (which requires a PackedSchedule) and crash.  Both
+    execution paths must run and agree with the pruned dense product."""
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((48, 64)).astype(np.float32)
+    x = rng.standard_normal((5, 64)).astype(np.float32)
+    wp = prune_by_magnitude(w, 0.25)
+    ys = {}
+    for uk in (False, True):
+        gl = GustLinear(w, SparsityConfig(enable=True, density=0.25,
+                                          gust_length=8, use_kernel=uk))
+        assert gl.packed.fusable
+        ys[uk] = np.asarray(gl(jnp.asarray(x)))
+        np.testing.assert_allclose(ys[uk], x @ wp.T, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ys[True], ys[False], rtol=1e-5, atol=1e-5)
+
+
 def test_cache_bytes_accounting():
     cfg = get_arch("yi_6b").reduced()
     lm = build_model(cfg)
