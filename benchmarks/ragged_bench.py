@@ -1,0 +1,165 @@
+"""Padded vs ragged color-block streaming on skewed (power-law) schedules.
+
+GUST's padded execution layout pads every window to the *heaviest*
+window's color count, so on power-law matrices — where ``max_w C_w``
+far exceeds the mean — most of the streamed ``(c_blk, l)`` blocks are
+dead padding cycles.  This benchmark synthesizes schedules at controlled
+skew (``max C_w / mean C_w``), asserts bit-identical ``gust_spmm``
+output between the two layouts, and records streamed-slot counts and
+XLA-path wall time to BENCH_ragged.json.
+
+Acceptance gate (ISSUE 2): at skew >= 4x the ragged stream must hold
+>= 2x fewer (c_blk, l) blocks than the padded stream (``--min-slot-ratio``)
+and be measurably faster (``--min-time-speedup``; lower it to 0 on noisy
+shared CI runners — the slot gate is deterministic and stays hard).
+
+Usage:
+    PYTHONPATH=src python benchmarks/ragged_bench.py
+        [--windows 2000] [--l 16] [--skews 1 4 16] [--iters 5]
+        [--batch 4] [--out BENCH_ragged.json]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.formats import GustSchedule
+from repro.core.packing import pack_ragged, pack_schedule, ragged_waste_ratio
+from repro.kernels.ops import gust_spmm
+
+
+def synth_skewed_schedule(num_windows: int, l: int, skew: float,
+                          c_mean: float = 4.0, seed: int = 0) -> GustSchedule:
+    """Fabricate a scheduled format with a controlled color-count skew:
+    a Pareto-ish tail scaled so ``max(cpw) / mean(cpw) ≈ skew`` (lane-
+    structured columns, like the real scheduler emits)."""
+    rng = np.random.default_rng(seed)
+    cpw = rng.integers(1, int(2 * c_mean), num_windows).astype(np.float64)
+    if skew > 1.0:
+        heavy = rng.random(num_windows) < 0.02  # 2% heavy tail
+        cpw[heavy] = cpw[heavy] * (skew * cpw.mean() / max(cpw[heavy].mean(), 1))
+    cpw = np.maximum(cpw.astype(np.int64), 1)
+    window_starts = np.zeros(num_windows + 1, dtype=np.int64)
+    np.cumsum(cpw, out=window_starts[1:])
+    c_total = int(window_starts[-1])
+    m = num_windows * l
+    n_seg = 4
+    m_sch = rng.standard_normal((c_total, l)).astype(np.float32)
+    row_sch = rng.integers(0, l, (c_total, l)).astype(np.int32)
+    seg = rng.integers(0, n_seg, (c_total, l)).astype(np.int32)
+    col_sch = seg * l + np.arange(l, dtype=np.int32)[None, :]
+    return GustSchedule(
+        l=l, shape=(m, n_seg * l), nnz=c_total * l, m_sch=m_sch,
+        row_sch=row_sch, col_sch=col_sch, window_starts=window_starts,
+        row_perm=np.arange(m, dtype=np.int64),
+        valid=np.ones((c_total, l), dtype=bool),
+    )
+
+
+def bench(fn, iters: int) -> float:
+    fn()  # warmup: jit compile + allocator pools
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--windows", type=int, default=2000)
+    ap.add_argument("--l", type=int, default=16)
+    ap.add_argument("--skews", type=float, nargs="+", default=[1, 4, 16])
+    ap.add_argument("--c-blk", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--min-slot-ratio", type=float, default=2.0,
+                    help="fail if padded/ragged streamed-block ratio is "
+                    "below this at skew >= 4 (0 = report-only)")
+    ap.add_argument("--min-time-speedup", type=float, default=1.0,
+                    help="fail if the ragged XLA path is not at least this "
+                    "much faster at skew >= 4; lower to 0 on noisy runners")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_ragged.json"))
+    args = ap.parse_args()
+
+    results = []
+    for skew in args.skews:
+        sched = synth_skewed_schedule(args.windows, args.l, skew)
+        cpw = np.diff(sched.window_starts)
+        measured_skew = float(cpw.max() / cpw.mean())
+        padded = pack_schedule(sched, args.c_blk)
+        ragged = pack_ragged(sched, args.c_blk)
+        n = sched.shape[1]
+        x = jnp.asarray(
+            np.random.default_rng(1).standard_normal((n, args.batch)),
+            jnp.float32,
+        )
+        y_pad = np.asarray(gust_spmm(padded, x, use_kernel=False,
+                                     c_blk=args.c_blk))
+        y_rag = np.asarray(gust_spmm(ragged, x, use_kernel=False))
+        assert np.array_equal(y_pad, y_rag), "padded/ragged outputs diverged"
+
+        t_pad = bench(
+            lambda: gust_spmm(padded, x, use_kernel=False,
+                              c_blk=args.c_blk).block_until_ready(),
+            args.iters,
+        )
+        t_rag = bench(
+            lambda: gust_spmm(ragged, x, use_kernel=False).block_until_ready(),
+            args.iters,
+        )
+        pad_blocks = padded.m_blk.shape[0] // args.c_blk
+        rec = {
+            "windows": args.windows,
+            "l": args.l,
+            "c_blk": args.c_blk,
+            "batch": args.batch,
+            "target_skew": skew,
+            "measured_skew": round(measured_skew, 2),
+            "c_pad": padded.c_pad,
+            "padded_blocks": int(pad_blocks),
+            "ragged_blocks": int(ragged.num_blocks),
+            "slot_ratio": round(pad_blocks / max(ragged.num_blocks, 1), 2),
+            "waste_ratio": round(ragged_waste_ratio(sched, args.c_blk), 2),
+            "padded_s": round(t_pad, 5),
+            "ragged_s": round(t_rag, 5),
+            "time_speedup": round(t_pad / t_rag, 2),
+        }
+        results.append(rec)
+        print(f"skew={measured_skew:6.1f}x  blocks {pad_blocks:>7} -> "
+              f"{ragged.num_blocks:>7} ({rec['slot_ratio']:.1f}x fewer)  "
+              f"time {t_pad*1e3:8.2f} -> {t_rag*1e3:8.2f} ms "
+              f"({rec['time_speedup']:.2f}x)")
+
+    payload = {"bench": "padded vs ragged color-block streaming",
+               "results": results}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print("wrote", args.out)
+
+    skewed = [r for r in results if r["measured_skew"] >= 4]
+    if skewed:
+        worst_slots = min(r["slot_ratio"] for r in skewed)
+        worst_time = min(r["time_speedup"] for r in skewed)
+        if worst_slots < args.min_slot_ratio:
+            raise SystemExit(
+                f"FAIL: ragged streams only {worst_slots}x fewer blocks "
+                f"(< {args.min_slot_ratio}x) at skew >= 4"
+            )
+        if worst_time < args.min_time_speedup:
+            raise SystemExit(
+                f"FAIL: ragged path only {worst_time}x faster "
+                f"(< {args.min_time_speedup}x) at skew >= 4"
+            )
+
+
+if __name__ == "__main__":
+    main()

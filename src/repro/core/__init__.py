@@ -4,12 +4,22 @@ from .formats import COOMatrix, GustSchedule, coo_from_dense, dense_from_coo
 from .scheduler import schedule
 from .packing import (
     PackedSchedule,
+    RaggedSchedule,
     ScheduleCache,
+    pack_auto,
+    pack_ragged,
     pack_schedule,
     packed_spec,
+    ragged_waste_ratio,
     schedule_packed,
 )
-from .spmv import spmv, spmv_scheduled, spmm_scheduled, distributed_spmv
+from .spmv import (
+    spmv,
+    spmv_scheduled,
+    spmm_scheduled,
+    spmm_ragged,
+    distributed_spmv,
+)
 from .bounds import (
     expected_colors_bound,
     expected_execution_cycles,
@@ -24,13 +34,18 @@ __all__ = [
     "dense_from_coo",
     "schedule",
     "PackedSchedule",
+    "RaggedSchedule",
     "ScheduleCache",
+    "pack_auto",
+    "pack_ragged",
     "pack_schedule",
     "packed_spec",
+    "ragged_waste_ratio",
     "schedule_packed",
     "spmv",
     "spmv_scheduled",
     "spmm_scheduled",
+    "spmm_ragged",
     "distributed_spmv",
     "expected_colors_bound",
     "expected_execution_cycles",

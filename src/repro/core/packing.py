@@ -18,30 +18,52 @@ Scheduled format lifecycle
    have different color counts).  Computed once per matrix; reused for
    every vector (paper §3.3/§5.3 amortization).
 
-2. **Pack (fixed-shape).**  :func:`pack_schedule` pads every window to a
-   common ``C_pad`` (max window colors rounded up to ``c_blk``) and
-   reshapes to ``(W * C_pad, l)`` blocks — a JAX pytree of plain arrays
-   that can be jit-ed over, sharded, donated, stacked across layers, and
-   described by ``ShapeDtypeStruct`` (:func:`packed_spec`) without running
-   the scheduler.
+2. **Pack (fixed-shape).**  Two fixed-shape layouts share the padding
+   invariants below:
 
-   Packed-format invariants (padding slots):
+   * :func:`pack_schedule` (*padded*) pads every window to a common
+     ``C_pad`` (max window colors rounded up to ``c_blk``) and reshapes
+     to ``(W * C_pad, l)`` blocks — a JAX pytree of plain arrays that can
+     be jit-ed over, sharded, donated, stacked across layers, and
+     described by ``ShapeDtypeStruct`` (:func:`packed_spec`) without
+     running the scheduler.
+   * :func:`pack_ragged` (*ragged block stream*) keeps only each window's
+     actual ``max(ceil(C_w / c_blk), 1)`` cycle blocks, flattened into one
+     ``(T_blk * c_blk, l)`` stream, plus scalar metadata derived from
+     ``window_starts``: ``block_window`` (window id of each block,
+     ``(T_blk,)``) and ``block_starts`` (per-window block prefix,
+     ``(W + 1,)``).  On skewed matrices — where ``max_w C_w`` far exceeds
+     the mean — this streams only real work instead of ``W * C_pad``
+     mostly-zero rows.  :func:`pack_auto` picks between the two by the
+     measured waste ratio ``(W * C_pad) / (T_blk * c_blk)``.
+
+   Packed-format invariants (padding slots, BOTH layouts — in the ragged
+   stream they apply to each window's final partial block and to the one
+   all-padding block an empty window keeps so its accumulator still
+   initializes/dumps):
      * ``m_blk``  is ``0``      — padding contributes nothing to any sum;
      * ``col_blk`` holds the slot's own lane index — the vector gather
        stays in-bounds and preserves the straight-lane structure the
        fused kernel's gather relies on (``col % l ∈ {lane, l-1-lane}``);
      * ``row_blk`` is ``0``     — safe because the value is 0.
-   Any transformation of a packed schedule (``repad_to``, layer stacking,
-   window padding for the distributed split) must preserve these.
+   Ragged-stream metadata contract: blocks of one window are contiguous
+   (``block_window`` is sorted), window ``w`` owns stream blocks
+   ``block_starts[w]:block_starts[w+1]``, every window owns at least one
+   block, and stream rows of block ``t`` are ``t*c_blk:(t+1)*c_blk``.
+   Any transformation of either layout (``repad_to``,
+   ``repad_to_blocks``, layer stacking, window padding for the
+   distributed split) must preserve all of the above.
 
-3. **Execute.**  ``kernels.ops.gust_spmm`` (Pallas or XLA),
-   ``core.spmv.distributed_spmv`` (k parallel length-l GUSTs), and
+3. **Execute.**  ``kernels.ops.gust_spmm`` (Pallas or XLA, padded *and*
+   ragged), ``core.spmv.distributed_spmv`` (k parallel length-l GUSTs,
+   sharded by equal block counts), and
    ``serving.gust_serve.decode_step_gust`` all stream the packed blocks.
    Serving stacks per-layer packs along a leading reps axis after
-   :meth:`PackedSchedule.repad_to` equalizes ``C_pad``; the leaves/meta
-   codec (:func:`packed_leaves` / :func:`packed_meta` /
-   :func:`packed_from_leaves`) is the one wire format shared by
-   ``gustify`` and the multi-pod dry-run specs.
+   :meth:`PackedSchedule.repad_to` (or :meth:`RaggedSchedule.
+   repad_to_blocks`) equalizes the stream length; the leaves/meta codec
+   (:func:`packed_leaves` / :func:`packed_meta` /
+   :func:`packed_from_leaves`, and the ragged twins) is the one wire
+   format shared by ``gustify`` and the multi-pod dry-run specs.
 
 4. **Cache.**  :class:`ScheduleCache` (module-level instance behind
    :func:`schedule_packed`) keys schedule+pack results on matrix
@@ -64,13 +86,22 @@ from .formats import COOMatrix, GustSchedule
 
 __all__ = [
     "PackedSchedule",
+    "RaggedSchedule",
     "pack_blocks",
     "pack_schedule",
+    "pack_ragged",
+    "pack_auto",
+    "DEFAULT_WASTE_THRESHOLD",
+    "ragged_waste_ratio",
     "packed_spec",
+    "ragged_spec",
     "window_ids",
     "packed_leaves",
     "packed_meta",
     "packed_from_leaves",
+    "ragged_leaves",
+    "ragged_meta",
+    "ragged_from_leaves",
     "stacked_leaf_specs",
     "ScheduleCache",
     "schedule_packed",
@@ -162,6 +193,124 @@ class PackedSchedule:
         )
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RaggedSchedule:
+    """Ragged color-block stream of the GUST scheduled format (pytree).
+
+    Unlike :class:`PackedSchedule` (every window padded to the global
+    ``C_pad``), the stream holds only each window's actual
+    ``max(ceil(C_w / c_blk), 1)`` cycle blocks, so skewed matrices never
+    execute the dead padding cycles of their light windows.
+
+    Arrays (leaves):
+      m_blk:        (T_blk * c_blk, l) values; 0.0 in padding slots (the
+                    final partial block of each window + the single
+                    all-padding block of an empty window).
+      col_blk:      (T_blk * c_blk, l) int original column index; padding
+                    slots hold the slot's own lane.
+      row_blk:      (T_blk * c_blk, l) int adder index; 0 in padding slots.
+      row_perm:     (W * l,) int32 — original row of each scheduled row
+                    position (identity-extended past m).
+      block_window: (T_blk,) int32 — window id of each stream block
+                    (sorted; blocks of one window are contiguous).
+      block_starts: (W + 1,) int32 — per-window block prefix: window ``w``
+                    owns stream blocks ``block_starts[w]:block_starts[w+1]``
+                    (always at least one).
+
+    Static (aux): l, num_windows, c_blk, num_blocks (= T_blk), shape,
+    fusable.
+    """
+
+    m_blk: jnp.ndarray
+    col_blk: jnp.ndarray
+    row_blk: jnp.ndarray
+    row_perm: jnp.ndarray
+    block_window: jnp.ndarray
+    block_starts: jnp.ndarray
+    l: int
+    num_windows: int
+    c_blk: int
+    num_blocks: int
+    shape: Tuple[int, int]
+    fusable: bool
+
+    def tree_flatten(self):
+        leaves = (self.m_blk, self.col_blk, self.row_blk, self.row_perm,
+                  self.block_window, self.block_starts)
+        aux = (self.l, self.num_windows, self.c_blk, self.num_blocks,
+               self.shape, self.fusable)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def seg_count(self) -> int:
+        return -(-self.shape[1] // self.l)
+
+    @property
+    def streamed_slots(self) -> int:
+        """(cycle, lane) slots the execution path actually streams."""
+        return self.num_blocks * self.c_blk * self.l
+
+    @property
+    def stream_bytes(self) -> int:
+        """HBM bytes of the scheduled stream (value + col + row leaves at
+        their actual dtypes — a compact bf16/int16 stream is ~half the
+        f32/i32 one) plus the scalar block metadata."""
+        return sum(
+            int(a.size) * jnp.dtype(a.dtype).itemsize
+            for a in (self.m_blk, self.col_blk, self.row_blk,
+                      self.block_window, self.block_starts)
+        )
+
+    def repad_to_blocks(self, num_blocks: int) -> "RaggedSchedule":
+        """Grow the stream to ``num_blocks`` blocks with all-padding
+        trailing blocks (attributed to the last window, whose accumulator
+        they extend by zero).  Preserves every leaf dtype and the padding
+        invariants; used to equalize stream lengths across stacked
+        serving layers."""
+        if num_blocks == self.num_blocks:
+            return self
+        if num_blocks < self.num_blocks:
+            raise ValueError(
+                f"cannot shrink num_blocks {self.num_blocks} -> {num_blocks}"
+                " (real cycles may live in the dropped blocks)"
+            )
+        l, extra = self.l, num_blocks - self.num_blocks
+        rows = extra * self.c_blk
+        lane = jnp.arange(l, dtype=self.col_blk.dtype)
+
+        def grow(a, pad_row):
+            pad = jnp.broadcast_to(
+                jnp.asarray(pad_row, jnp.asarray(a).dtype)[None, :], (rows, l)
+            )
+            return jnp.concatenate([jnp.asarray(a), pad], axis=0)
+
+        last_w = max(self.num_windows - 1, 0)
+        bw = jnp.concatenate([
+            jnp.asarray(self.block_window),
+            jnp.full((extra,), last_w, self.block_window.dtype),
+        ])
+        bs = jnp.asarray(self.block_starts).at[-1].set(num_blocks)
+        return RaggedSchedule(
+            m_blk=grow(self.m_blk, np.zeros(l, np.float32)),
+            col_blk=grow(self.col_blk, lane),
+            row_blk=grow(self.row_blk, np.zeros(l, np.int32)),
+            row_perm=self.row_perm,
+            block_window=bw,
+            block_starts=bs,
+            l=l,
+            num_windows=self.num_windows,
+            c_blk=self.c_blk,
+            num_blocks=num_blocks,
+            shape=self.shape,
+            fusable=self.fusable,
+        )
+
+
 def window_ids(sched: GustSchedule) -> np.ndarray:
     """Window id of each global schedule cycle, shape (max(C_total, 1),)."""
     wid = np.zeros(max(sched.total_colors, 1), dtype=np.int32)
@@ -205,14 +354,27 @@ def pack_blocks(
         r_b[dest] = sched.row_sch[:c_total]
         c_b[dest] = sched.col_sch[:c_total]
 
-    # Verify the lane structure the fused gather relies on: every slot's
-    # column offset is its lane or the reversed lane.  Checking the ragged
-    # source is equivalent to checking the padded blocks (padding slots are
-    # lane-valued by construction) and touches ~C_pad/C̄ fewer elements.
+    return m_b, c_b, r_b, c_pad, _fusable(sched)
+
+
+def _fusable(sched: GustSchedule) -> bool:
+    """Verify the lane structure the fused gather relies on: every slot's
+    column offset is its lane or the reversed lane.  Checking the ragged
+    source is equivalent to checking either packed layout (padding slots
+    are lane-valued by construction) and touches fewer elements."""
+    l = sched.l
+    lane = np.arange(l, dtype=np.int32)
     src = sched.col_sch
-    off = (src & (l - 1)) if l & (l - 1) == 0 else (src % l)
-    fusable = bool(np.all((off == lane[None, :]) | (off == (l - 1 - lane)[None, :])))
-    return m_b, c_b, r_b, c_pad, fusable
+    off = (src & (l - 1)) if (l & (l - 1)) == 0 else (src % l)
+    return bool(np.all((off == lane[None, :]) | (off == (l - 1 - lane)[None, :])))
+
+
+def _extended_row_perm(sched: GustSchedule) -> np.ndarray:
+    """row_perm identity-extended to the full W*l scheduled row positions
+    (shared by both fixed-shape layouts)."""
+    row_perm = np.arange(sched.num_windows * sched.l, dtype=np.int32)
+    row_perm[: sched.row_perm.shape[0]] = sched.row_perm
+    return row_perm
 
 
 def pack_schedule(
@@ -228,9 +390,7 @@ def pack_schedule(
     l, W = sched.l, sched.num_windows
     m, n = sched.shape
     m_b, c_b, r_b, c_pad, fusable = pack_blocks(sched, c_blk)
-
-    row_perm = np.arange(W * l, dtype=np.int32)
-    row_perm[: sched.row_perm.shape[0]] = sched.row_perm
+    row_perm = _extended_row_perm(sched)
 
     return PackedSchedule(
         m_blk=jnp.asarray(m_b, value_dtype),
@@ -242,6 +402,117 @@ def pack_schedule(
         c_pad=c_pad,
         shape=(m, n),
         fusable=fusable,
+    )
+
+
+def _ragged_block_layout(
+    sched: GustSchedule, c_blk: int
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """(blocks_per_window, block_starts, num_blocks) of the ragged stream.
+
+    Every window keeps ``ceil(C_w / c_blk)`` blocks, floored at one so
+    empty windows still own a block (their accumulator tile must
+    initialize and dump once — the hardware's minimum one dump per
+    window)."""
+    cpw = np.diff(np.asarray(sched.window_starts))
+    bpw = np.maximum(-(-cpw // c_blk), 1).astype(np.int64)
+    block_starts = np.zeros(sched.num_windows + 1, dtype=np.int64)
+    np.cumsum(bpw, out=block_starts[1:])
+    return bpw, block_starts, int(block_starts[-1])
+
+
+def ragged_waste_ratio(sched: GustSchedule, c_blk: int = 8) -> float:
+    """Padding waste of the padded layout relative to the ragged stream:
+    ``(W * C_pad) / (T_blk * c_blk)``.  1.0 means every window already has
+    the max color count (padding streams nothing extra); >= ~2 means the
+    padded path spends most of its stream on dead cycles."""
+    l, W = sched.l, sched.num_windows
+    cpw = np.diff(np.asarray(sched.window_starts))
+    c_max = int(cpw.max()) if W else 1
+    c_pad = max(-(-c_max // c_blk) * c_blk, c_blk)
+    _, _, t_blk = _ragged_block_layout(sched, c_blk)
+    return (W * c_pad) / float(max(t_blk * c_blk, 1))
+
+
+def pack_ragged(
+    sched: GustSchedule, c_blk: int = 8, value_dtype=jnp.float32,
+    index_dtype=jnp.int32,
+) -> RaggedSchedule:
+    """Flatten the ragged per-window schedule into a (T_blk * c_blk, l)
+    block stream holding only real cycle blocks (plus each window's final
+    partial-block padding, which keeps the packed-format invariants).
+
+    One fancy-indexed scatter by ``window_starts``-derived destinations —
+    O(nnz) host numpy, same as :func:`pack_blocks` — plus O(W) scalar
+    metadata (``block_window``, ``block_starts``)."""
+    l, W = sched.l, sched.num_windows
+    m, n = sched.shape
+    ws = np.asarray(sched.window_starts)
+    cpw = np.diff(ws)
+    c_total = int(ws[-1]) if W else 0
+    bpw, block_starts, t_blk = _ragged_block_layout(sched, c_blk)
+
+    lane = np.arange(l, dtype=np.int32)
+    # Same one-backing-allocation trick as pack_blocks (f32/i32 share the
+    # itemsize, so the value plane is a reinterpreting view).
+    buf = np.zeros((3, t_blk * c_blk, l), dtype=np.int32)
+    m_b = buf[0].view(np.float32)
+    r_b = buf[1]
+    c_b = buf[2]
+    c_b[:] = lane  # padding slots gather v[lane] (packed-format invariant)
+    if c_total:
+        wid = np.repeat(np.arange(W, dtype=np.int64), cpw)
+        dest = block_starts[wid] * c_blk + (
+            np.arange(c_total, dtype=np.int64) - ws[wid]
+        )
+        m_b[dest] = sched.m_sch[:c_total]
+        r_b[dest] = sched.row_sch[:c_total]
+        c_b[dest] = sched.col_sch[:c_total]
+
+    block_window = np.repeat(np.arange(W, dtype=np.int32), bpw)
+
+    return RaggedSchedule(
+        m_blk=jnp.asarray(m_b, value_dtype),
+        col_blk=jnp.asarray(c_b, index_dtype),
+        row_blk=jnp.asarray(r_b, index_dtype),
+        row_perm=jnp.asarray(_extended_row_perm(sched)),
+        block_window=jnp.asarray(block_window),
+        block_starts=jnp.asarray(block_starts, jnp.int32),
+        l=l,
+        num_windows=W,
+        c_blk=c_blk,
+        num_blocks=t_blk,
+        shape=(m, n),
+        fusable=_fusable(sched),
+    )
+
+
+#: Padded-stream waste (``W * C_pad`` over ``T_blk * c_blk``) above which
+#: the ragged layout is chosen — the one source of truth for ``pack_auto``,
+#: ``ScheduleCache.auto_for`` and ``gust_spmm_auto``.
+DEFAULT_WASTE_THRESHOLD = 2.0
+
+
+def pack_auto(
+    sched: GustSchedule, c_blk: int = 8, *, waste_threshold: float = None,
+    value_dtype=jnp.float32, index_dtype=jnp.int32,
+):
+    """Pick the execution layout by measured padding waste.
+
+    Returns :func:`pack_ragged` output when the padded layout would stream
+    ``>= waste_threshold`` times more (cycle, lane) slots than the ragged
+    stream (skewed matrices), else :func:`pack_schedule` output (near-
+    uniform windows, where the simpler 2-D-grid padded kernel wins).  Only
+    the chosen layout is materialized.  ``waste_threshold=None`` means
+    :data:`DEFAULT_WASTE_THRESHOLD` (shared with every auto caller)."""
+    if waste_threshold is None:
+        waste_threshold = DEFAULT_WASTE_THRESHOLD
+    if ragged_waste_ratio(sched, c_blk) >= waste_threshold:
+        return pack_ragged(
+            sched, c_blk, value_dtype=value_dtype, index_dtype=index_dtype
+        )
+    return pack_schedule(
+        sched, c_blk, value_dtype=value_dtype, index_dtype=index_dtype
     )
 
 
@@ -266,6 +537,36 @@ def packed_spec(
         l=l,
         num_windows=W,
         c_pad=c_pad,
+        shape=(m, n),
+        fusable=True,
+    )
+
+
+def ragged_spec(
+    m: int,
+    n: int,
+    l: int,
+    num_blocks: int,
+    c_blk: int = 8,
+    value_dtype=jnp.float32,
+    index_dtype=jnp.int32,
+) -> RaggedSchedule:
+    """ShapeDtypeStruct stand-in for a RaggedSchedule — the ragged twin of
+    :func:`packed_spec` for dry-runs.  ``num_blocks`` is typically sized
+    from the Eq. 9 bound: ``W * ceil(expected_colors_bound / c_blk)``."""
+    W = max(-(-m // l), 1)
+    sds = jax.ShapeDtypeStruct
+    return RaggedSchedule(
+        m_blk=sds((num_blocks * c_blk, l), value_dtype),
+        col_blk=sds((num_blocks * c_blk, l), index_dtype),
+        row_blk=sds((num_blocks * c_blk, l), index_dtype),
+        row_perm=sds((W * l,), jnp.int32),
+        block_window=sds((num_blocks,), jnp.int32),
+        block_starts=sds((W + 1,), jnp.int32),
+        l=l,
+        num_windows=W,
+        c_blk=c_blk,
+        num_blocks=num_blocks,
         shape=(m, n),
         fusable=True,
     )
@@ -303,15 +604,57 @@ def packed_from_leaves(leaves: Dict, meta: Tuple) -> PackedSchedule:
     )
 
 
-def stacked_leaf_specs(proto: PackedSchedule, reps: int) -> Dict:
+def ragged_leaves(r: RaggedSchedule) -> Dict:
+    """Array leaves of a ragged stream as a plain dict (jit-able pytree)."""
+    return {
+        "m_blk": r.m_blk,
+        "col_blk": r.col_blk,
+        "row_blk": r.row_blk,
+        "row_perm": r.row_perm,
+        "block_window": r.block_window,
+        "block_starts": r.block_starts,
+    }
+
+
+def ragged_meta(r: RaggedSchedule) -> Tuple:
+    """Static part: ``("ragged", l, num_windows, c_blk, num_blocks, shape,
+    fusable)``.  The leading tag disambiguates from :func:`packed_meta`
+    tuples in serialized serving stacks."""
+    return ("ragged", r.l, r.num_windows, r.c_blk, r.num_blocks, r.shape,
+            r.fusable)
+
+
+def ragged_from_leaves(leaves: Dict, meta: Tuple) -> RaggedSchedule:
+    """Inverse of the ragged codec."""
+    tag, l, w, c_blk, t_blk, shape, fusable = meta
+    if tag != "ragged":
+        raise ValueError(f"not a ragged meta tuple: {meta!r}")
+    return RaggedSchedule(
+        m_blk=leaves["m_blk"],
+        col_blk=leaves["col_blk"],
+        row_blk=leaves["row_blk"],
+        row_perm=leaves["row_perm"],
+        block_window=leaves["block_window"],
+        block_starts=leaves["block_starts"],
+        l=l, num_windows=w, c_blk=c_blk, num_blocks=t_blk, shape=shape,
+        fusable=fusable,
+    )
+
+
+def stacked_leaf_specs(proto, reps: int) -> Dict:
     """ShapeDtypeStruct leaves of ``reps`` layer packs stacked on axis 0.
 
-    Works for both real-array and spec prototypes (only .shape/.dtype are
-    read) — this is how ``dryrun_specs`` sizes the serving stack without
-    running the scheduler."""
+    Works for packed and ragged prototypes, real-array or spec (only
+    .shape/.dtype are read) — this is how ``dryrun_specs`` sizes the
+    serving stack without running the scheduler."""
+    leaves = (
+        ragged_leaves(proto)
+        if isinstance(proto, RaggedSchedule)
+        else packed_leaves(proto)
+    )
     return {
         k: jax.ShapeDtypeStruct((reps, *v.shape), v.dtype)
-        for k, v in packed_leaves(proto).items()
+        for k, v in leaves.items()
     }
 
 
@@ -402,6 +745,100 @@ class ScheduleCache:
             ),
         )
         return sched, packed
+
+    def ragged_packed(
+        self, coo: COOMatrix, l: int, *, load_balance: bool = True,
+        method: str = "fast", c_blk: int = 8, value_dtype=jnp.float32,
+        index_dtype=jnp.int32,
+    ) -> Tuple[GustSchedule, "RaggedSchedule"]:
+        """Ragged twin of :meth:`packed`: schedule + ragged block stream,
+        both served from the matrix-content-keyed store."""
+        mk = self.matrix_key(coo)
+        sched = self._schedule_for_key(mk, coo, l, load_balance, method)
+        key = (
+            "ragged", mk, l, load_balance, method, c_blk,
+            jnp.dtype(value_dtype).name, jnp.dtype(index_dtype).name,
+        )
+        ragged = self._get(
+            key,
+            lambda: pack_ragged(
+                sched, c_blk=c_blk, value_dtype=value_dtype,
+                index_dtype=index_dtype,
+            ),
+        )
+        return sched, ragged
+
+    @staticmethod
+    def schedule_key(sched: GustSchedule) -> str:
+        """Content key of an already-built schedule — used by call sites
+        that receive a ``GustSchedule`` rather than the source matrix
+        (``distributed_spmv``, ``gust_spmm_auto``)."""
+        h = hashlib.sha1()
+        h.update(repr((sched.l, sched.shape, sched.nnz)).encode())
+        for a in (sched.m_sch, sched.row_sch, sched.col_sch,
+                  sched.window_starts, sched.row_perm):
+            arr = np.ascontiguousarray(a)
+            h.update(str(arr.dtype).encode())
+            h.update(arr.tobytes())
+        return h.hexdigest()
+
+    def pack_for(
+        self, sched: GustSchedule, *, c_blk: int = 8,
+        value_dtype=jnp.float32, index_dtype=jnp.int32,
+    ) -> PackedSchedule:
+        """Memoized :func:`pack_schedule` keyed on schedule content —
+        repeated executions of the same schedule (every ``distributed_spmv``
+        call, serving re-exports) pack exactly once."""
+        key = ("pack_for", self.schedule_key(sched), c_blk,
+               jnp.dtype(value_dtype).name, jnp.dtype(index_dtype).name)
+        return self._get(
+            key,
+            lambda: pack_schedule(
+                sched, c_blk=c_blk, value_dtype=value_dtype,
+                index_dtype=index_dtype,
+            ),
+        )
+
+    def ragged_for(
+        self, sched: GustSchedule, *, c_blk: int = 8,
+        value_dtype=jnp.float32, index_dtype=jnp.int32,
+    ) -> RaggedSchedule:
+        """Memoized :func:`pack_ragged` keyed on schedule content."""
+        key = ("ragged_for", self.schedule_key(sched), c_blk,
+               jnp.dtype(value_dtype).name, jnp.dtype(index_dtype).name)
+        return self._get(
+            key,
+            lambda: pack_ragged(
+                sched, c_blk=c_blk, value_dtype=value_dtype,
+                index_dtype=index_dtype,
+            ),
+        )
+
+    def auto_for(
+        self, sched: GustSchedule, *, c_blk: int = 8,
+        waste_threshold: float = None, value_dtype=jnp.float32,
+        index_dtype=jnp.int32,
+    ):
+        """Cached twin of :func:`pack_auto`: one waste-ratio decision,
+        delegated to :meth:`ragged_for` / :meth:`pack_for` so the chosen
+        layout is memoized on schedule content."""
+        if waste_threshold is None:
+            waste_threshold = DEFAULT_WASTE_THRESHOLD
+        route = (
+            self.ragged_for
+            if ragged_waste_ratio(sched, c_blk) >= waste_threshold
+            else self.pack_for
+        )
+        return route(
+            sched, c_blk=c_blk, value_dtype=value_dtype,
+            index_dtype=index_dtype,
+        )
+
+    def memo(self, key: Tuple, build):
+        """Generic LRU memoization for artifacts *derived from* cached
+        entries (e.g. the distributed device-major shard layout).  ``key``
+        must lead with a tag distinct from the built-in routes."""
+        return self._get(key, build)
 
     def clear(self):
         self._store.clear()

@@ -22,13 +22,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from .formats import COOMatrix, GustSchedule
-from .packing import pack_schedule, window_ids
+from .packing import RaggedSchedule, window_ids
 
 __all__ = [
     "spmv_dense_ref",
     "spmv_scheduled",
     "spmv",
     "spmm_scheduled",
+    "spmm_ragged",
     "distributed_spmv",
 ]
 
@@ -95,6 +96,44 @@ def spmm_scheduled(sched: GustSchedule, x: jnp.ndarray) -> jnp.ndarray:
     return jax.vmap(lambda col: spmv_scheduled(sched, col), in_axes=1, out_axes=1)(x)
 
 
+@functools.partial(jax.jit, static_argnames=("m", "l", "num_windows", "c_blk"))
+def _spmm_ragged_impl(
+    m_blk, row_blk, col_blk, block_window, row_perm, x, *, m, l, num_windows,
+    c_blk,
+):
+    # Level 1: multiply the ragged stream (only real blocks) against the
+    # gathered vector.  Padding slots carry value 0 / in-bounds lane cols.
+    v_sch = jnp.take(x, col_blk.astype(jnp.int32), axis=0, mode="clip")
+    partial = m_blk.astype(jnp.float32)[:, :, None] * v_sch.astype(jnp.float32)
+    # Levels 2+3: the window of stream row r is block_window[r // c_blk];
+    # global adder id = window*l + row, one segment-sum integrates+dumps
+    # every window.
+    window = jnp.repeat(block_window.astype(jnp.int32), c_blk)
+    adder = window[:, None] * l + row_blk.astype(jnp.int32)
+    b = x.shape[1]
+    y_sorted = jax.ops.segment_sum(
+        partial.reshape(-1, b), adder.reshape(-1),
+        num_segments=num_windows * l,
+    )
+    out = jnp.zeros((max(m, num_windows * l), b), jnp.float32)
+    return out.at[row_perm].set(y_sorted)[:m]
+
+
+def spmm_ragged(ragged: RaggedSchedule, x: jnp.ndarray) -> jnp.ndarray:
+    """Multi-vector SpMV from the ragged block stream (pure jnp segment-
+    sum; oracle for the scalar-prefetch kernel): ``x`` (n, B) -> (m, B).
+    Streams ``T_blk * c_blk`` rows instead of the padded ``W * C_pad`` —
+    on skewed matrices most of the padded stream is dead cycles."""
+    m, n = ragged.shape
+    if x.ndim != 2 or x.shape[0] != n:
+        raise ValueError(f"expected (n={n}, B), got {x.shape}")
+    return _spmm_ragged_impl(
+        ragged.m_blk, ragged.row_blk, ragged.col_blk, ragged.block_window,
+        ragged.row_perm, x, m=m, l=ragged.l, num_windows=ragged.num_windows,
+        c_blk=ragged.c_blk,
+    ).astype(x.dtype)
+
+
 def spmv(
     coo: COOMatrix,
     v: jnp.ndarray,
@@ -126,6 +165,9 @@ def distributed_spmv(
     v: jnp.ndarray,
     mesh: jax.sharding.Mesh,
     axis: str = "data",
+    *,
+    c_blk: int = 1,
+    cache="default",
 ):
     """Shard row-windows across ``axis`` (each device runs an independent
     length-l GUST over its windows; the schedule is untouched — paper:
@@ -133,54 +175,130 @@ def distributed_spmv(
     replicated; outputs concatenate without collectives because windows own
     disjoint output rows.
 
-    Windows are padded to a multiple of the axis size with empty windows
-    (C_w = 0 contributes zero cycles on real hardware; here zero slots)."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    Devices get contiguous window ranges balanced by **block count** of
+    the ragged stream (``max(ceil(C_w / c_blk), 1)`` blocks per window),
+    not by window count: on skewed (power-law) matrices equal-window
+    splits leave most devices idle while one drains the heavy windows,
+    and the old padded layout additionally streamed every light window at
+    the global ``C_pad``.  Each device executes only its own blocks,
+    padded to the max per-device block count (the residual imbalance of a
+    contiguous split).
 
-    from repro.distributed.collectives import shard_map
+    The ragged pack is served from the content-keyed
+    :class:`~repro.core.packing.ScheduleCache` (``cache="default"`` uses
+    the process-global one, ``None`` re-packs every call), so repeated
+    calls on the same schedule pack exactly once."""
+    from .packing import default_cache, pack_ragged
 
     n_dev = mesh.shape[axis]
     m, n = sched.shape
     l, W = sched.l, sched.num_windows
-    W_pad = -(-W // n_dev) * n_dev
+    if cache == "default":
+        cache = default_cache
+    if cache is None:
+        layout = _shard_layout(pack_ragged(sched, c_blk), n_dev)
+    else:
+        # the whole device-major layout (host assembly + device upload) is
+        # a pure function of (schedule content, c_blk, n_dev) — memoize it
+        # next to the ragged pack so repeated calls only run the shard_map
+        layout = cache.memo(
+            ("shard_layout", cache.schedule_key(sched), c_blk, n_dev),
+            lambda: _shard_layout(
+                cache.ragged_for(sched, c_blk=c_blk), n_dev
+            ),
+        )
+    m_d, r_d, c_d, lw_d, w_max, idx = layout
+    fn = _shard_spmv_fn(mesh, axis, l, c_blk, w_max)
+    y_dev = fn(m_d, r_d, c_d, lw_d, v)
+    # Reassemble: device d's first w_cnt[d]*l rows are windows
+    # w_bound[d]..w_bound[d+1] in order (collectives-free concatenation).
+    y_sorted = y_dev.reshape(-1)[idx][:m]
+    return jnp.zeros((m,), jnp.float32).at[jnp.asarray(sched.row_perm)].set(y_sorted)
 
-    # Canonical packer (c_blk=1 -> C_pad == max window colors), then pad the
-    # window axis to a multiple of the device count.  Padded slots keep the
-    # packed-format invariants: values 0, columns gather the slot's lane.
-    packed = pack_schedule(sched, c_blk=1)
-    c_pad = packed.c_pad
 
-    def blocks(a, lane_fill=False):
-        a3 = jnp.reshape(a, (W, c_pad, l))
-        if W_pad == W:
-            return a3
-        if lane_fill:
-            pad = jnp.broadcast_to(
-                jnp.arange(l, dtype=a3.dtype)[None, None, :],
-                (W_pad - W, c_pad, l),
-            )
-            return jnp.concatenate([a3, pad], axis=0)
-        return jnp.pad(a3, ((0, W_pad - W), (0, 0), (0, 0)))
+@functools.lru_cache(maxsize=64)
+def _shard_spmv_fn(mesh, axis: str, l: int, c_blk: int, w_max: int):
+    """Jitted shard_map program for one (mesh, geometry) — memoized so
+    repeated ``distributed_spmv`` calls reuse jax's trace/compile cache
+    instead of paying a fresh closure trace every call."""
+    from jax.sharding import PartitionSpec as P
 
-    m_b = blocks(packed.m_blk)
-    r_b = blocks(packed.row_blk)
-    c_b = blocks(packed.col_blk, lane_fill=True)
+    from repro.distributed.collectives import shard_map
 
-    def local(m_blk, r_blk, c_blk, vec):
-        # (W_loc, c_max, l) -> per-window segment sum -> (W_loc * l,)
-        p = m_blk.astype(jnp.float32) * jnp.take(vec, c_blk, axis=0, mode="clip")
-        w_loc = m_blk.shape[0]
-        adder = jnp.arange(w_loc, dtype=jnp.int32)[:, None, None] * l + r_blk
-        return jax.ops.segment_sum(p.reshape(-1), adder.reshape(-1), num_segments=w_loc * l)
+    def local(m_blk, r_blk, c_blk_, lw, vec):
+        # (1, B_max*cb, l) stream + (1, B_max) local window ids ->
+        # per-window segment sum -> (1, W_max * l)
+        p = m_blk[0].astype(jnp.float32) * jnp.take(
+            vec, c_blk_[0], axis=0, mode="clip"
+        )
+        window = jnp.repeat(lw[0], c_blk)
+        adder = window[:, None] * l + r_blk[0]
+        return jax.ops.segment_sum(
+            p.reshape(-1), adder.reshape(-1), num_segments=w_max * l
+        )[None]
 
-    spec_in = P(axis)  # shard leading window dim
-    fn = jax.jit(
+    spec_in = P(axis)  # shard the leading device dim
+    return jax.jit(
         shard_map(
             local,
             mesh=mesh,
-            in_specs=(spec_in, spec_in, spec_in, P()),
+            in_specs=(spec_in, spec_in, spec_in, spec_in, P()),
             out_specs=spec_in,
         )
     )
-    y_sorted = fn(m_b, r_b, c_b, v)[: m]
-    return jnp.zeros((m,), jnp.float32).at[jnp.asarray(sched.row_perm)].set(y_sorted[:m])
+
+
+def _shard_layout(ragged, n_dev: int):
+    """Device-major execution layout of a ragged stream for ``n_dev``
+    devices: contiguous window ranges balanced by block count, each
+    device's blocks padded to the common max.
+
+    Returns ``(m_d, r_d, c_d, lw_d, w_max, idx)`` — the four ``(n_dev,
+    ...)`` device arrays for the shard_map, the padded per-device window
+    count, and the gather index reassembling the per-device outputs into
+    scheduled row order.  Everything here is a pure function of (ragged
+    stream, n_dev); ``distributed_spmv`` memoizes it in the
+    ``ScheduleCache`` so repeated calls skip both the host assembly and
+    the host->device upload."""
+    l, W, cb, t_blk = ragged.l, ragged.num_windows, ragged.c_blk, ragged.num_blocks
+    block_starts = np.asarray(ragged.block_starts, np.int64)
+    block_window = np.asarray(ragged.block_window, np.int64)
+
+    # Contiguous window boundaries hitting equal block-count targets:
+    # device d owns windows [w_bound[d], w_bound[d+1]).
+    targets = (np.arange(1, n_dev) * t_blk) // n_dev
+    w_bound = np.concatenate(
+        [[0], np.searchsorted(block_starts, targets, side="left"), [W]]
+    )
+    w_bound = np.maximum.accumulate(np.minimum(w_bound, W))
+    w_cnt = np.diff(w_bound)
+    b_cnt = block_starts[w_bound[1:]] - block_starts[w_bound[:-1]]
+    b_max = max(int(b_cnt.max()) if n_dev else 1, 1)
+    w_max = max(int(w_cnt.max()) if n_dev else 1, 1)
+
+    # Device-major padded streams; padding blocks keep the packed-format
+    # invariants (values 0, columns gather the slot's lane, rows 0) and
+    # route to local window 0 — value 0 contributes nothing.
+    lane = np.arange(l, dtype=np.int32)
+    m_d = np.zeros((n_dev, b_max * cb, l), np.float32)
+    r_d = np.zeros((n_dev, b_max * cb, l), np.int32)
+    c_d = np.broadcast_to(lane, (n_dev, b_max * cb, l)).copy()
+    lw_d = np.zeros((n_dev, b_max), np.int32)
+    m_src = np.asarray(ragged.m_blk, np.float32)
+    r_src = np.asarray(ragged.row_blk, np.int32)
+    c_src = np.asarray(ragged.col_blk, np.int32)
+    for d in range(n_dev):
+        g0, g1 = int(block_starts[w_bound[d]]), int(block_starts[w_bound[d + 1]])
+        rows = (g1 - g0) * cb
+        m_d[d, :rows] = m_src[g0 * cb: g1 * cb]
+        r_d[d, :rows] = r_src[g0 * cb: g1 * cb]
+        c_d[d, :rows] = c_src[g0 * cb: g1 * cb]
+        lw_d[d, : g1 - g0] = block_window[g0:g1] - w_bound[d]
+
+    idx = np.concatenate(
+        [d * w_max * l + np.arange(w_cnt[d] * l) for d in range(n_dev)]
+    ) if W else np.zeros(0, np.int64)
+    return (
+        jnp.asarray(m_d), jnp.asarray(r_d), jnp.asarray(c_d),
+        jnp.asarray(lw_d), w_max, jnp.asarray(idx),
+    )

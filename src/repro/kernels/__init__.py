@@ -1,9 +1,19 @@
 """Pallas TPU kernels for the GUST hot path (validated via interpret=True).
 
-  gust_spmv.py   -- flagship: fused gather + one-hot MXU routing SpMV
-  gather_fill.py -- standalone Buffer-Filler vector gather
-  ops.py         -- jit'd public wrappers + packed-format utilities
-  ref.py         -- pure-jnp oracles (same block semantics, no Pallas)
+  gust_spmv.py        -- flagship: fused gather + one-hot MXU routing SpMV
+                         over the padded (W, C_pad/c_blk) grid
+  gust_spmv_ragged.py -- ragged color-block streaming variant: 1-D
+                         scalar-prefetch grid over real blocks only
+  gather_fill.py      -- standalone Buffer-Filler vector gather
+  ops.py              -- jit'd public wrappers + padded/ragged dispatch
+  ref.py              -- pure-jnp oracles (same block semantics, no Pallas)
 """
 
-from .ops import PackedSchedule, pack_schedule, packed_spec, gust_spmm
+from .ops import (
+    PackedSchedule,
+    RaggedSchedule,
+    pack_schedule,
+    packed_spec,
+    gust_spmm,
+    gust_spmm_auto,
+)

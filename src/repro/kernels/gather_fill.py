@@ -53,6 +53,7 @@ def _kernel(col_ref, xs_ref, xf_ref, out_ref, *, l, seg_count, c_blk, b):
     out_ref[...] = out.transpose(1, 0, 2)  # (C_blk, l, B)
 
 
+@functools.lru_cache(maxsize=256)
 def make_gather_fill(
     total_rows: int,
     l: int,
@@ -63,7 +64,8 @@ def make_gather_fill(
     interpret: bool = True,
 ):
     """pallas_call producing ``V_sch`` of shape (total_rows, l, B) from
-    ``Col_sch`` (total_rows, l) and the VMEM-resident vector."""
+    ``Col_sch`` (total_rows, l) and the VMEM-resident vector.  Memoized on
+    geometry like :func:`repro.kernels.gust_spmv.make_gust_spmv`."""
     if total_rows % c_blk:
         raise ValueError("total_rows must be a multiple of c_blk")
     grid = (total_rows // c_blk,)

@@ -40,12 +40,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["make_gust_spmv"]
+__all__ = ["make_gust_spmv", "block_accumulate"]
 
 
-def _kernel(m_ref, col_ref, row_ref, xs_ref, xf_ref, y_ref, *, l, seg_count, c_blk, b):
-    cb = pl.program_id(1)
-
+def block_accumulate(m_ref, col_ref, row_ref, xs_ref, xf_ref, *, l, seg_count,
+                     c_blk, b):
+    """Shared per-block math of the padded and ragged kernels: fused
+    Buffer-Filler gather + VPU multiply + one-hot routing matmul.  Returns
+    the block's (1, l, B) contribution to its window accumulator."""
     m_blk = m_ref[...].astype(jnp.float32)  # (C_blk, l)
     col_blk = col_ref[...].astype(jnp.int32)  # (C_blk, l) int
     row_blk = row_ref[...].astype(jnp.int32)  # (C_blk, l) int
@@ -87,12 +89,20 @@ def _kernel(m_ref, col_ref, row_ref, xs_ref, xf_ref, y_ref, *, l, seg_count, c_b
     ).astype(jnp.float32)
     # (l, B) = (C_blk*l, l)^T @ (C_blk*l, B); padding slots carry m==0 and
     # row==0, contributing exactly zero.
-    acc = jax.lax.dot_general(
+    return jax.lax.dot_general(
         onehot_row,
         p_flat,
         (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )[None]  # (1, l, B)
+
+
+def _kernel(m_ref, col_ref, row_ref, xs_ref, xf_ref, y_ref, *, l, seg_count, c_blk, b):
+    cb = pl.program_id(1)
+    acc = block_accumulate(
+        m_ref, col_ref, row_ref, xs_ref, xf_ref,
+        l=l, seg_count=seg_count, c_blk=c_blk, b=b,
+    )
 
     @pl.when(cb == 0)
     def _init():
@@ -103,6 +113,7 @@ def _kernel(m_ref, col_ref, row_ref, xs_ref, xf_ref, y_ref, *, l, seg_count, c_b
         y_ref[...] += acc
 
 
+@functools.lru_cache(maxsize=256)
 def make_gust_spmv(
     num_windows: int,
     c_pad: int,
@@ -114,6 +125,11 @@ def make_gust_spmv(
     interpret: bool = True,
 ):
     """Build the pallas_call for a fixed packed-schedule geometry.
+
+    Memoized on geometry (all args are hashable scalars): ``gust_spmm``
+    calls this on every trace, and direct callers (tests, the unfused
+    path) would otherwise rebuild the kernel closure — and retrace it —
+    on every invocation.
 
     BlockSpecs:
       * schedule stream (m/col/row): HBM -> VMEM tiles of (c_blk, l), one

@@ -1,0 +1,111 @@
+"""Ragged color-block streaming Pallas TPU kernel for GUST SpMV.
+
+The padded flagship kernel (``gust_spmv.py``) runs a dense
+``(W, C_pad/c_blk)`` grid: every window executes the color-block count of
+the *heaviest* window, so on skewed (power-law) matrices most grid steps
+stream and multiply all-zero padding blocks.  This kernel executes the
+ragged block stream built by :func:`repro.core.packing.pack_ragged`
+instead: a **1-D grid over the real blocks only** (``T_blk`` steps,
+``T_blk = Σ_w max(ceil(C_w / c_blk), 1)``), driven by scalar prefetch
+(``pltpu.PrefetchScalarGridSpec``).
+
+Two scalar-prefetch operands derived from ``window_starts`` steer the
+pipeline before each kernel body runs:
+
+  block_window (T_blk,)  — window id of block ``t``; indexes the output
+                           BlockSpec so block ``t`` lands on its window's
+                           (1, l, B) accumulator tile;
+  block_starts (W + 1,)  — per-window block prefix; ``t ==
+                           block_starts[block_window[t]]`` marks a
+                           window's first block.
+
+Blocks of one window are contiguous in the stream, so the output tile is
+revisited across exactly that window's blocks: the accumulator
+initializes on the window's first block and is flushed when the grid
+moves to the next window's tile — the paper's integrate-then-dump, minus
+the dead padding cycles.  The per-block math (fused Buffer-Filler gather,
+VPU multiply, one-hot routing matmul) is shared with the padded kernel
+(:func:`repro.kernels.gust_spmv.block_accumulate`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .gust_spmv import block_accumulate
+
+__all__ = ["make_gust_spmv_ragged"]
+
+
+def _kernel(bw_ref, bs_ref, m_ref, col_ref, row_ref, xs_ref, xf_ref, y_ref,
+            *, l, seg_count, c_blk, b):
+    t = pl.program_id(0)
+    w = bw_ref[t]
+    acc = block_accumulate(
+        m_ref, col_ref, row_ref, xs_ref, xf_ref,
+        l=l, seg_count=seg_count, c_blk=c_blk, b=b,
+    )
+    is_first = t == bs_ref[w]
+
+    @pl.when(is_first)
+    def _init():
+        y_ref[...] = acc
+
+    @pl.when(jnp.logical_not(is_first))
+    def _accum():
+        y_ref[...] += acc
+
+
+@functools.lru_cache(maxsize=256)
+def make_gust_spmv_ragged(
+    num_blocks: int,
+    num_windows: int,
+    l: int,
+    seg_count: int,
+    b: int,
+    *,
+    c_blk: int = 8,
+    interpret: bool = True,
+):
+    """Build the scalar-prefetch pallas_call for a ragged-stream geometry.
+
+    Call signature of the returned function:
+    ``fn(block_window, block_starts, m_blk, col_blk, row_blk, xs, xf)``
+    with the stream blocks ``(num_blocks * c_blk, l)`` and the two x
+    layouts ``(seg_count, l, b)``; returns ``(num_windows, l, b)`` f32
+    per-window accumulators.
+
+    BlockSpecs:
+      * schedule stream (m/col/row): HBM -> VMEM tiles of (c_blk, l), one
+        real block per grid step — no padding blocks are ever streamed;
+      * x (straight + flipped): full-array VMEM residency;
+      * y: the (1, l, B) accumulator tile of ``block_window[t]``,
+        revisited across that window's contiguous blocks.
+
+    Memoized on geometry, like the padded builder.
+    """
+    grid = (num_blocks,)
+    sched_spec = pl.BlockSpec((c_blk, l), lambda t, bw, bs: (t, 0))
+    x_spec = pl.BlockSpec((seg_count, l, b), lambda t, bw, bs: (0, 0, 0))
+    out_spec = pl.BlockSpec((1, l, b), lambda t, bw, bs: (bw[t], 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[sched_spec, sched_spec, sched_spec, x_spec, x_spec],
+        out_specs=out_spec,
+    )
+    kernel = functools.partial(
+        _kernel, l=l, seg_count=seg_count, c_blk=c_blk, b=b
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_windows, l, b), jnp.float32),
+        interpret=interpret,
+    )

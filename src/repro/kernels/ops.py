@@ -7,26 +7,49 @@ repadding, the leaves/meta codec, and the content-keyed schedule cache).
 here for compatibility; this module only owns the *execution* entry
 point.
 
-``gust_spmm`` executes ``y = M @ x`` for ``x: (n, B)`` through either the
-fused Pallas kernel (``use_kernel=True``) or the pure-XLA packed path
-(identical math, used as the dry-run/serving default on non-TPU backends
-and as the kernel oracle).
+``gust_spmm`` executes ``y = M @ x`` for ``x: (n, B)`` from **either**
+fixed-shape layout — a padded :class:`PackedSchedule` (dense
+``(W, C_pad/c_blk)`` grid) or a ragged :class:`RaggedSchedule` block
+stream (1-D scalar-prefetch grid over real blocks only) — through the
+Pallas kernels (``use_kernel=True``) or the pure-XLA segment-sum path
+(identical math; the dry-run/serving default on non-TPU backends and the
+kernel oracle).  The layout choice is made at pack time:
+:func:`repro.core.packing.pack_auto` picks ragged when the measured
+padding waste ``(W * C_pad) / (T_blk * c_blk)`` crosses its threshold,
+and :func:`gust_spmm_auto` wires schedule → auto-pack → execute through
+the content-keyed cache.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import PackedSchedule, pack_schedule, packed_spec
+from repro.core.formats import GustSchedule
+from repro.core.packing import (
+    PackedSchedule,
+    RaggedSchedule,
+    default_cache,
+    pack_auto,
+    pack_schedule,
+    packed_spec,
+)
 
 from .gust_spmv import make_gust_spmv
-from .ref import gust_spmv_ref
+from .gust_spmv_ragged import make_gust_spmv_ragged
+from .ref import gust_spmv_ragged_ref, gust_spmv_ref
 
-__all__ = ["PackedSchedule", "pack_schedule", "gust_spmm", "packed_spec"]
+__all__ = [
+    "PackedSchedule",
+    "RaggedSchedule",
+    "pack_schedule",
+    "gust_spmm",
+    "gust_spmm_auto",
+    "packed_spec",
+]
 
 
 def _prep_x(x: jnp.ndarray, n: int, l: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -41,38 +64,96 @@ def _prep_x(x: jnp.ndarray, n: int, l: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret", "c_blk"))
 def gust_spmm(
-    packed: PackedSchedule,
+    packed: Union[PackedSchedule, RaggedSchedule],
     x: jnp.ndarray,
     *,
     use_kernel: bool = True,
     interpret: bool = True,
     c_blk: int = 8,
 ) -> jnp.ndarray:
-    """``y = M @ x`` from the packed scheduled format; x (n, B) -> y (m, B)."""
+    """``y = M @ x`` from either fixed-shape scheduled layout;
+    x (n, B) -> y (m, B).
+
+    ``c_blk`` only applies to the padded layout (a ragged stream's block
+    height is baked in at pack time)."""
     m, n = packed.shape
     if x.ndim != 2 or x.shape[0] != n:
         raise ValueError(f"expected x of shape ({n}, B), got {x.shape}")
     l, W = packed.l, packed.num_windows
     b = x.shape[1]
+    ragged = isinstance(packed, RaggedSchedule)
 
     if use_kernel and packed.fusable:
         x2d, x2f = _prep_x(x, n, l)
-        fn = make_gust_spmv(
-            W, packed.c_pad, l, packed.seg_count, b, c_blk=c_blk, interpret=interpret
-        )
-        y_win = fn(packed.m_blk, packed.col_blk, packed.row_blk, x2d, x2f)
+        if ragged:
+            fn = make_gust_spmv_ragged(
+                packed.num_blocks, W, l, packed.seg_count, b,
+                c_blk=packed.c_blk, interpret=interpret,
+            )
+            y_win = fn(
+                packed.block_window, packed.block_starts,
+                packed.m_blk, packed.col_blk, packed.row_blk, x2d, x2f,
+            )
+        else:
+            fn = make_gust_spmv(
+                W, packed.c_pad, l, packed.seg_count, b, c_blk=c_blk,
+                interpret=interpret,
+            )
+            y_win = fn(packed.m_blk, packed.col_blk, packed.row_blk, x2d, x2f)
     else:
         seg_count = -(-n // l)
         xp = jnp.pad(x, ((0, seg_count * l - n), (0, 0)))
-        y_win = gust_spmv_ref(
-            packed.m_blk,
-            packed.col_blk,
-            packed.row_blk,
-            xp,
-            num_windows=W,
-            l=l,
-        )
+        if ragged:
+            y_win = gust_spmv_ragged_ref(
+                packed.m_blk,
+                packed.col_blk,
+                packed.row_blk,
+                packed.block_window,
+                xp,
+                num_windows=W,
+                l=l,
+                c_blk=packed.c_blk,
+            )
+        else:
+            y_win = gust_spmv_ref(
+                packed.m_blk,
+                packed.col_blk,
+                packed.row_blk,
+                xp,
+                num_windows=W,
+                l=l,
+            )
     y_sorted = y_win.reshape(W * l, b)
     out = jnp.zeros((max(m, W * l), b), jnp.float32)
     out = out.at[packed.row_perm].set(y_sorted)
     return out[:m].astype(x.dtype)
+
+
+def gust_spmm_auto(
+    sched: GustSchedule,
+    x: jnp.ndarray,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = True,
+    c_blk: int = 8,
+    waste_threshold: float = None,
+    cache=default_cache,
+) -> jnp.ndarray:
+    """Schedule-level entry: auto-select ragged vs padded execution by the
+    measured waste ratio ``(W * C_pad) / (T_blk * c_blk)``, pack through
+    the content-keyed cache (pass ``cache=None`` to bypass), execute.
+
+    Skewed matrices (max window colors >> mean) take the ragged streaming
+    path; near-uniform ones keep the simpler padded grid.  The layout
+    decision lives in one place — :func:`repro.core.packing.pack_auto` /
+    :meth:`ScheduleCache.auto_for` (``waste_threshold=None`` means
+    ``DEFAULT_WASTE_THRESHOLD``)."""
+    if cache is None:
+        packed = pack_auto(sched, c_blk, waste_threshold=waste_threshold)
+    else:
+        packed = cache.auto_for(
+            sched, c_blk=c_blk, waste_threshold=waste_threshold
+        )
+    return gust_spmm(
+        packed, x, use_kernel=use_kernel, interpret=interpret, c_blk=c_blk
+    )

@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gust_spmv_ref", "gather_fill_ref"]
+__all__ = ["gust_spmv_ref", "gust_spmv_ragged_ref", "gather_fill_ref"]
 
 
 def gather_fill_ref(
@@ -38,6 +38,33 @@ def gust_spmv_ref(
     v_sch = gather_fill_ref(col_blocks, x_padded)  # (T, l, B)
     partial = m_blocks.astype(jnp.float32)[:, :, None] * v_sch
     window = jnp.arange(total, dtype=jnp.int32) // c_pad
+    adder = window[:, None] * l + row_blocks.astype(jnp.int32)  # (T, l)
+    b = x_padded.shape[1]
+    y = jax.ops.segment_sum(
+        partial.reshape(-1, b),
+        adder.reshape(-1),
+        num_segments=num_windows * l,
+    )
+    return y.reshape(num_windows, l, b)
+
+
+def gust_spmv_ragged_ref(
+    m_blocks: jnp.ndarray,  # (T_blk*c_blk, l) values (0 in padding)
+    col_blocks: jnp.ndarray,  # (T_blk*c_blk, l) int32
+    row_blocks: jnp.ndarray,  # (T_blk*c_blk, l) int32 adder index
+    block_window: jnp.ndarray,  # (T_blk,) int32 window id of each block
+    x_padded: jnp.ndarray,  # (S*l, B)
+    *,
+    num_windows: int,
+    l: int,
+    c_blk: int,
+) -> jnp.ndarray:
+    """Oracle for the ragged scalar-prefetch kernel: same gather/multiply,
+    with the window of each stream row read from ``block_window`` instead
+    of a fixed ``C_pad`` stride.  Returns (W, l, B) f32."""
+    v_sch = gather_fill_ref(col_blocks, x_padded)  # (T, l, B)
+    partial = m_blocks.astype(jnp.float32)[:, :, None] * v_sch
+    window = jnp.repeat(block_window.astype(jnp.int32), c_blk)  # (T,)
     adder = window[:, None] * l + row_blocks.astype(jnp.int32)  # (T, l)
     b = x_padded.shape[1]
     y = jax.ops.segment_sum(

@@ -185,8 +185,9 @@ def build_gust_decode_cell(arch_id: str, mesh, density: float = 0.1,
     shape = SHAPES["decode_32k"]
     dp = dp_axes(mesh)
     compact = os.environ.get("REPRO_GUST_COMPACT", "0") == "1"
+    ragged = os.environ.get("REPRO_GUST_RAGGED", "0") == "1"
     gcfg = GustServeConfig(density=density, gust_length=gust_length,
-                           use_kernel=False, compact=compact)
+                           use_kernel=False, compact=compact, ragged=ragged)
     gust_specs = dryrun_specs(lm, gcfg)
     params_specs = _bf16_params(jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0))))
     pspecs = param_specs(params_specs, mesh, mode="serve")
@@ -275,6 +276,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
             ),
         }
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # one dict per device on jax<=0.4.x
+            ca = ca[0] if ca else {}
         rec["xla_cost"] = {
             "flops": float(ca.get("flops", -1.0)),
             "bytes": float(ca.get("bytes accessed", -1.0)),

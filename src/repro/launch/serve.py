@@ -35,6 +35,7 @@ def run_serving(
     density: float = 0.25,
     gust_length: int = 32,
     use_kernel: bool = False,
+    ragged: bool = False,
     seed: int = 0,
 ):
     cfg = get_arch(arch)
@@ -45,7 +46,8 @@ def run_serving(
     gcfg = None
     if gust:
         gcfg = GustServeConfig(
-            density=density, gust_length=gust_length, use_kernel=use_kernel
+            density=density, gust_length=gust_length, use_kernel=use_kernel,
+            ragged=ragged,
         )
     sc = ServeConfig(batch=batch, seq_len=seq_len, dtype="float32", gust=gcfg)
     loop = ServeLoop(lm, params, sc, seed=seed)
@@ -71,6 +73,9 @@ def run_serving(
             k: round(v["stream_utilization"], 4)
             for k, v in loop.gust_tree["stats"].items()
         }
+        stats["gust_streamed_slots"] = {
+            k: v["streamed_slots"] for k, v in loop.gust_tree["stats"].items()
+        }
     return done, stats
 
 
@@ -87,12 +92,16 @@ def main():
     ap.add_argument("--density", type=float, default=0.25)
     ap.add_argument("--gust-length", type=int, default=32)
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--ragged", action="store_true",
+                    help="stack ragged color-block streams (only real "
+                    "cycle blocks) instead of the padded C_pad layout")
     args = ap.parse_args()
     _, stats = run_serving(
         args.arch, batch=args.batch, seq_len=args.seq_len,
         requests=args.requests, prompt_len=args.prompt_len,
         max_new=args.max_new, gust=args.gust, density=args.density,
         gust_length=args.gust_length, use_kernel=args.use_kernel,
+        ragged=args.ragged,
     )
     print(json.dumps(stats))
 

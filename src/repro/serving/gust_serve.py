@@ -11,10 +11,15 @@ routes each layer's MLP matvecs through the GUST SpMV path.
 Layer stacking: packed schedules are padded to a *uniform* color count
 C_pad across layers (``PackedSchedule.repad_to``) so the leaves stack
 along the reps axis and the layer scan stays a single compact HLO — the
-GUST schedule is literally part of the serving checkpoint.  The ragged→
-packed conversion, the leaves/meta codec shared with ``dryrun_specs``,
-and the content-keyed schedule cache all live in ``repro.core.packing``
-(see its module docstring for the format lifecycle and invariants).
+GUST schedule is literally part of the serving checkpoint.  With
+``GustServeConfig.ragged`` the stack holds ragged color-block streams
+instead: layers are equalized to the longest layer's *block count*
+(``RaggedSchedule.repad_to_blocks``) rather than the heaviest window's
+C_pad, so skewed pruned matrices stop streaming dead padding cycles
+through every decode step.  The ragged→packed conversion, the leaves/meta
+codec shared with ``dryrun_specs``, and the content-keyed schedule cache
+all live in ``repro.core.packing`` (see its module docstring for the
+format lifecycle and invariants).
 
 Applies to pattern-length-1 dense archs (phi3/yi/mistral-large/llava/
 gemma3 would need per-position stacks — gemma3 and the MoE archs run the
@@ -37,10 +42,15 @@ from repro.core.bounds import expected_colors_bound
 from repro.core.formats import COOMatrix
 from repro.core.gust_linear import prune_by_magnitude
 from repro.core.packing import (
+    default_cache,
     packed_from_leaves,
     packed_leaves,
     packed_meta,
     packed_spec,
+    ragged_from_leaves,
+    ragged_leaves,
+    ragged_meta,
+    ragged_spec,
     schedule_packed,
     stacked_leaf_specs,
 )
@@ -64,6 +74,9 @@ class GustServeConfig:
     use_kernel: bool = False  # Pallas path (interpret on CPU) vs XLA path
     compact: bool = False  # bf16 values + int16 indices: 12 -> 6 B/slot,
     # the TPU analogue of the paper's (64 + log l)-bit packed stream
+    ragged: bool = False  # ragged color-block streams: per-layer stacks
+    # hold only real cycle blocks (pruned LLM matrices are skewed — the
+    # padded layout streams every window at the heaviest window's C_pad)
     mats: Tuple[str, ...] = _MLP_MATS
 
     @property
@@ -105,26 +118,45 @@ def gustify(lm: LM, params, cfg: GustServeConfig) -> Dict:
         for r in range(reps):
             # schedule + pack through the content-keyed cache: re-gustifying
             # the same weights (e.g. a compact re-export) reuses the schedule
-            sched, packed = schedule_packed(
-                _prune_to_coo(w_stack[r], cfg), cfg.gust_length,
-                load_balance=cfg.load_balance, method=cfg.method, c_blk=8,
-                value_dtype=cfg.value_dtype, index_dtype=cfg.index_dtype,
-            )
+            coo = _prune_to_coo(w_stack[r], cfg)
+            if cfg.ragged:
+                sched, packed = default_cache.ragged_packed(
+                    coo, cfg.gust_length, load_balance=cfg.load_balance,
+                    method=cfg.method, c_blk=8,
+                    value_dtype=cfg.value_dtype, index_dtype=cfg.index_dtype,
+                )
+            else:
+                sched, packed = schedule_packed(
+                    coo, cfg.gust_length, load_balance=cfg.load_balance,
+                    method=cfg.method, c_blk=8,
+                    value_dtype=cfg.value_dtype, index_dtype=cfg.index_dtype,
+                )
             cycles.append(sched.cycles)
             packs.append(packed)
-        # re-pad every layer to the uniform c_pad so leaves stack
-        c_uniform = max(p.c_pad for p in packs)
-        packs = [p.repad_to(c_uniform) for p in packs]
+        if cfg.ragged:
+            # equalize stream length so leaves stack: grow every layer to
+            # the longest layer's block count with all-padding blocks
+            t_uniform = max(p.num_blocks for p in packs)
+            packs = [p.repad_to_blocks(t_uniform) for p in packs]
+            leaf_fn, meta = ragged_leaves, ragged_meta(packs[0])
+            size_stat = {"num_blocks": t_uniform}
+        else:
+            # re-pad every layer to the uniform c_pad so leaves stack
+            c_uniform = max(p.c_pad for p in packs)
+            packs = [p.repad_to(c_uniform) for p in packs]
+            leaf_fn, meta = packed_leaves, packed_meta(packs[0])
+            size_stat = {"c_pad": c_uniform}
         leaves = jax.tree.map(
-            lambda *xs: jnp.stack(xs), *[packed_leaves(p) for p in packs]
+            lambda *xs: jnp.stack(xs), *[leaf_fn(p) for p in packs]
         )
-        out["mats"][name] = {"leaves": leaves, "meta": packed_meta(packs[0])}
+        out["mats"][name] = {"leaves": leaves, "meta": meta}
         nnz = int(np.count_nonzero(np.asarray(leaves["m_blk"])))
         slots = leaves["m_blk"].size
         out["stats"][name] = {
             "cycles_per_layer": cycles,
-            "c_pad": c_uniform,
             "stream_utilization": nnz / max(slots, 1),
+            "streamed_slots": int(slots),
+            **size_stat,
         }
     return out
 
@@ -136,8 +168,11 @@ def _gust_mlp(gust_slice, metas, x, mlp_kind: str, cfg: GustServeConfig):
     act = jax.nn.silu if mlp_kind == "swiglu" else jax.nn.gelu
 
     def mv(name, v):
-        packed = packed_from_leaves(gust_slice[name], metas[name])
-        return gust_spmm(packed, v, use_kernel=cfg.use_kernel)
+        meta = metas[name]
+        rebuild = ragged_from_leaves if meta[0] == "ragged" else packed_from_leaves
+        return gust_spmm(
+            rebuild(gust_slice[name], meta), v, use_kernel=cfg.use_kernel
+        )
 
     g = act(mv("w_gate", xt).astype(jnp.float32))
     u = mv("w_up", xt).astype(jnp.float32)
@@ -180,7 +215,10 @@ def decode_step_gust(lm: LM, params, gust, caches, tokens, pos, *,
 def dryrun_specs(lm: LM, cfg: GustServeConfig) -> Dict:
     """ShapeDtypeStruct stand-in for the gust pytree, with the scheduled
     stream sized from Eq. 9: C = E[colors] bound at the pruned density —
-    the dry-run proof that the GUST decode path lowers and fits."""
+    the dry-run proof that the GUST decode path lowers and fits.  Honors
+    ``cfg.ragged``: a ragged config dry-runs the ragged program (the
+    Eq. 9 bound sizes every window's block count, so the spec'd stream is
+    ``W * ceil(C/c_blk)`` blocks)."""
     reps = lm.stack.reps
     d = lm.cfg.d_model
     f = lm.cfg.d_ff
@@ -189,11 +227,20 @@ def dryrun_specs(lm: LM, cfg: GustServeConfig) -> Dict:
     for name in cfg.mats:
         m, n = (d, f) if name == "w_down" else (f, d)
         c = expected_colors_bound(n, cfg.density, l)
-        c_pad = max(-(-int(np.ceil(c)) // 8) * 8, 8)
-        proto = packed_spec(m, n, l, c_pad, value_dtype=cfg.value_dtype,
-                            index_dtype=cfg.index_dtype)
+        if cfg.ragged:
+            bpw = max(-(-int(np.ceil(c)) // 8), 1)
+            num_blocks = max(-(-m // l), 1) * bpw
+            proto = ragged_spec(m, n, l, num_blocks, c_blk=8,
+                                value_dtype=cfg.value_dtype,
+                                index_dtype=cfg.index_dtype)
+            meta = ragged_meta(proto)
+        else:
+            c_pad = max(-(-int(np.ceil(c)) // 8) * 8, 8)
+            proto = packed_spec(m, n, l, c_pad, value_dtype=cfg.value_dtype,
+                                index_dtype=cfg.index_dtype)
+            meta = packed_meta(proto)
         out["mats"][name] = {
             "leaves": stacked_leaf_specs(proto, reps),
-            "meta": packed_meta(proto),
+            "meta": meta,
         }
     return out

@@ -1,0 +1,47 @@
+"""Hypothesis property test: ragged-vs-padded bit-identity of ``gust_spmm``
+over random AND power-law-degree matrices, all three colorers, both
+load-balance modes (the ISSUE 2 equivalence acceptance).  The sweep/edge
+cases live in ``test_ragged.py``; this module needs hypothesis and is
+skipped without it (like ``test_scheduler.py``)."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import coo_from_dense
+from repro.core.scheduler import schedule
+
+from test_ragged import all_paths, assert_equivalent, power_law_dense, \
+    random_dense
+
+matrix_strategy = st.tuples(
+    st.integers(2, 48),  # m
+    st.integers(2, 64),  # n
+    st.sampled_from([0.05, 0.2, 0.5]),
+    st.sampled_from([4, 8, 16]),  # l
+    st.integers(1, 4),  # B
+    st.booleans(),  # power-law skew
+    st.integers(0, 10_000),  # seed
+)
+
+
+@pytest.mark.parametrize("method", ["paper", "fast", "exact"])
+@settings(max_examples=20, deadline=None)
+@given(args=matrix_strategy)
+def test_ragged_equivalence_property(method, args):
+    m, n, density, l, b, skew, seed = args
+    rng = np.random.default_rng(seed)
+    dense = (
+        power_law_dense(rng, m, n, base_density=density * 0.2)
+        if skew
+        else random_dense(rng, m, n, density)
+    )
+    x = rng.standard_normal((n, b)).astype(np.float32)
+    for lb in (False, True):
+        sched = schedule(coo_from_dense(dense), l, load_balance=lb,
+                         method=method)
+        ys, _, _ = all_paths(sched, x)
+        assert_equivalent(ys, dense @ x)
