@@ -29,8 +29,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.formats import GustSchedule
-from repro.core.packing import pack_ragged, pack_schedule, ragged_waste_ratio
-from repro.kernels.ops import gust_spmm
+from repro.core.plan import PlanConfig, plan
 
 
 def synth_skewed_schedule(num_windows: int, l: int, skew: float,
@@ -95,27 +94,24 @@ def main():
         sched = synth_skewed_schedule(args.windows, args.l, skew)
         cpw = np.diff(sched.window_starts)
         measured_skew = float(cpw.max() / cpw.mean())
-        padded = pack_schedule(sched, args.c_blk)
-        ragged = pack_ragged(sched, args.c_blk)
+        # one plan per layout over the same schedule (cache bypassed: the
+        # synthetic packs are throwaway), both on the XLA backend
+        p_pad = plan(sched, PlanConfig(layout="padded", backend="jnp",
+                                       c_blk=args.c_blk), cache=None)
+        p_rag = plan(sched, PlanConfig(layout="ragged", backend="jnp",
+                                       c_blk=args.c_blk), cache=None)
+        padded, ragged = p_pad.artifact, p_rag.artifact
         n = sched.shape[1]
         x = jnp.asarray(
             np.random.default_rng(1).standard_normal((n, args.batch)),
             jnp.float32,
         )
-        y_pad = np.asarray(gust_spmm(padded, x, use_kernel=False,
-                                     c_blk=args.c_blk))
-        y_rag = np.asarray(gust_spmm(ragged, x, use_kernel=False))
+        y_pad = np.asarray(p_pad.spmm(x))
+        y_rag = np.asarray(p_rag.spmm(x))
         assert np.array_equal(y_pad, y_rag), "padded/ragged outputs diverged"
 
-        t_pad = bench(
-            lambda: gust_spmm(padded, x, use_kernel=False,
-                              c_blk=args.c_blk).block_until_ready(),
-            args.iters,
-        )
-        t_rag = bench(
-            lambda: gust_spmm(ragged, x, use_kernel=False).block_until_ready(),
-            args.iters,
-        )
+        t_pad = bench(lambda: p_pad.spmm(x).block_until_ready(), args.iters)
+        t_rag = bench(lambda: p_rag.spmm(x).block_until_ready(), args.iters)
         pad_blocks = padded.m_blk.shape[0] // args.c_blk
         rec = {
             "windows": args.windows,
@@ -128,7 +124,7 @@ def main():
             "padded_blocks": int(pad_blocks),
             "ragged_blocks": int(ragged.num_blocks),
             "slot_ratio": round(pad_blocks / max(ragged.num_blocks, 1), 2),
-            "waste_ratio": round(ragged_waste_ratio(sched, args.c_blk), 2),
+            "waste_ratio": round(p_rag.cost().waste_ratio, 2),
             "padded_s": round(t_pad, 5),
             "ragged_s": round(t_rag, 5),
             "time_speedup": round(t_pad / t_rag, 2),

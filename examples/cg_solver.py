@@ -1,6 +1,6 @@
-"""Conjugate-gradient solver on the GUST scheduled format — the paper's
-§5.3 amortization argument end-to-end: schedule ONCE, run hundreds of
-SpMVs against changing vectors inside an iterative solver.
+"""Conjugate-gradient solver on a GUST plan — the paper's §5.3
+amortization argument end-to-end: plan ONCE (schedule + pack), run
+hundreds of SpMVs against changing vectors inside an iterative solver.
 
     PYTHONPATH=src python examples/cg_solver.py
 """
@@ -11,9 +11,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import coo_from_dense
-from repro.core.scheduler import schedule
-from repro.kernels.ops import gust_spmm, pack_schedule
+import repro
 
 
 def make_spd(n: int, density: float, seed: int = 0) -> np.ndarray:
@@ -30,15 +28,16 @@ def main():
     a_dense = make_spd(n, 0.05)
     b = np.random.default_rng(1).standard_normal(n).astype(np.float32)
 
-    # preprocessing: one schedule, reused by every iteration
+    # preprocessing: one plan (schedule + packed layout), reused by every
+    # iteration — the schedule-once/execute-many contract made explicit
     t0 = time.time()
-    sched = schedule(coo_from_dense(a_dense), l=64, load_balance=True)
-    packed = pack_schedule(sched)
+    p = repro.plan(a_dense, repro.PlanConfig(l=64, backend="jnp"))
+    cost = p.cost()
     pre_s = time.time() - t0
-    print(f"schedule: {pre_s:.2f}s ({sched.cycles} modeled cycles/SpMV, "
-          f"util={sched.hardware_utilization:.1%})")
+    print(f"plan: {pre_s:.2f}s ({cost.cycles} modeled cycles/SpMV, "
+          f"util={cost.utilization:.1%}, layout={cost.layout})")
 
-    matvec = jax.jit(lambda v: gust_spmm(packed, v[:, None], use_kernel=False)[:, 0])
+    matvec = jax.jit(lambda v: p.spmm(v[:, None])[:, 0])
 
     # conjugate gradient
     x = jnp.zeros(n)
@@ -62,7 +61,7 @@ def main():
     solve_s = time.time() - t0
     err = np.abs(a_dense @ np.asarray(x) - b).max()
     print(f"solve: {solve_s:.2f}s, |Ax-b|_inf = {err:.2e}")
-    print(f"amortization: 1 preprocessing ({pre_s:.2f}s) served "
+    print(f"amortization: 1 plan ({pre_s:.2f}s) served "
           f"{it+1} SpMVs (paper §5.3: schedule once, solve many)")
 
 

@@ -1,6 +1,11 @@
-"""Quickstart: schedule a sparse matrix with GUST edge-coloring, run the
-SpMV three ways (dense oracle, scheduled XLA, Pallas kernel), and print
-the paper's headline metrics for this matrix.
+"""Quickstart: plan a sparse matrix once with GUST edge-coloring, execute
+the SpMV many ways through the one plan/execute API, and print the
+paper's headline metrics for this matrix.
+
+The whole pipeline is two calls:
+
+    p = repro.plan(matrix, repro.PlanConfig(l=256))   # schedule + pack once
+    y = p.spmv(v)                                     # execute many times
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,11 +13,8 @@ the paper's headline metrics for this matrix.
 import numpy as np
 import jax.numpy as jnp
 
+import repro
 from repro.core.baselines import all_designs
-from repro.core.formats import coo_from_dense
-from repro.core.scheduler import schedule
-from repro.core.spmv import spmv_scheduled
-from repro.kernels.ops import gust_spmm, pack_schedule
 
 
 def main():
@@ -23,27 +25,35 @@ def main():
         np.float32
     )
     v = rng.standard_normal(n).astype(np.float32)
-    coo = coo_from_dense(dense)
-    print(f"matrix: {m}x{n}, nnz={coo.nnz:,}, density={coo.density:.3f}")
+    print(f"matrix: {m}x{n}, density={density:.3f}")
 
-    # 1. preprocessing: bipartite edge-coloring schedule (paper Listing 1/2)
-    sched = schedule(coo, l=256, load_balance=True)
-    print(f"schedule: {sched.num_windows} windows, {sched.total_colors} colors, "
-          f"{sched.cycles} cycles, utilization={sched.hardware_utilization:.1%}")
+    # 1. plan: bipartite edge-coloring schedule + packed execution layout,
+    #    computed once per matrix (paper §3.3/§5.3 amortization; the plan
+    #    is served from a content-keyed cache on repeat calls)
+    p = repro.plan(dense, repro.PlanConfig(l=256, layout="auto"))
+    cost = p.cost()
+    print(f"plan: {p}")
+    print(f"schedule: {p.sched.num_windows} windows, "
+          f"{p.sched.total_colors} colors, {cost.cycles} cycles, "
+          f"utilization={cost.utilization:.1%}")
+    print(f"layout: {cost.layout} (padding waste {cost.waste_ratio:.2f}x), "
+          f"stream {cost.stream_bytes / 1e6:.1f} MB, "
+          f"Eq.10 predicted cycles {cost.expected_cycles:,.0f}")
 
-    # 2. execute: scheduled SpMV == dense matvec
+    # 2. execute: plan SpMV == dense matvec (pure-XLA segment-sum backend)
     y_ref = dense @ v
-    y_sched = np.asarray(spmv_scheduled(sched, jnp.asarray(v)))
-    print("scheduled-vs-dense max err:", np.abs(y_sched - y_ref).max())
+    y_plan = np.asarray(p.spmv(jnp.asarray(v)))
+    print("plan-vs-dense max err:  ", np.abs(y_plan - y_ref).max())
 
-    # 3. the Pallas TPU kernel (interpret mode on CPU)
-    packed = pack_schedule(sched)
-    y_kernel = np.asarray(gust_spmm(packed, jnp.asarray(v[:, None])))[:, 0]
-    print("kernel-vs-dense max err:   ", np.abs(y_kernel - y_ref).max())
+    # 3. same plan, Pallas TPU kernel backend (interpret mode on CPU) and
+    #    a multi-vector (decode-batch) execution
+    pk = repro.plan(dense, repro.PlanConfig(l=256, backend="pallas"))
+    y_kernel = np.asarray(pk.spmm(jnp.asarray(v[:, None])))[:, 0]
+    print("kernel-vs-dense max err:", np.abs(y_kernel - y_ref).max())
 
     # 4. the paper's comparison (Fig. 7 on this matrix)
     print("\ndesign comparison (cycles / utilization):")
-    for name, rep in all_designs(coo, 256).items():
+    for name, rep in all_designs(repro.coo_from_dense(dense), 256).items():
         print(f"  {name:12s} {rep.cycles:12,.0f} cycles   "
               f"util={rep.utilization:8.4%}")
 

@@ -2,6 +2,10 @@
 GUST-sparse decode side by side — the paper's technique as a serving
 feature (assignment deliverable b; DESIGN.md §4).
 
+Engine build plans every MLP matrix exactly once (``gustify`` ->
+``repro.plan``, content-keyed cache) and each decode step executes the
+stacked :class:`repro.GustPlan` leaves — schedule once, decode many.
+
     PYTHONPATH=src python examples/serve_lm.py
 """
 

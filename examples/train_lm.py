@@ -48,7 +48,7 @@ def main():
           f"{args.steps} steps")
 
     with tempfile.TemporaryDirectory() as ckpt_dir:
-        _, history = run_training(
+        state, history = run_training(
             cfg.name,
             reduced=False,
             steps=args.steps,
@@ -63,6 +63,22 @@ def main():
         )
     print(f"loss: {history[0]:.3f} -> {history[-1]:.3f} "
           f"({(1 - history[-1]/history[0])*100:.1f}% reduction)")
+
+    # train -> serve handoff: plan one trained MLP matrix through the GUST
+    # plan/execute API (this is what gustify does for the whole stack at
+    # weight-load time — schedule once, decode many)
+    import numpy as np
+
+    import repro
+
+    w = np.asarray(state["params"]["stack"]["reps"][0]["mlp"]["w_down"])[0].T
+    gl = repro.GustLinear(
+        w, config=repro.PlanConfig(l=64, backend="jnp"), density=0.25
+    )
+    cost = gl.plan.cost()
+    print(f"GUST handoff: w_down {w.shape} pruned to 25% density -> "
+          f"{cost.cycles} cycles/SpMV, util={cost.utilization:.1%}, "
+          f"layout={cost.layout}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,108 @@
+"""repro — GUST (graph edge-coloring SpMV acceleration) reproduction.
+
+Public API, exported lazily (PEP 562) so ``import repro`` is instant and
+pulls **no** jax/kernel modules — important both for CLI startup and for
+entry points like ``repro.launch.dryrun`` that must pin ``XLA_FLAGS``
+before jax initializes.  The front door is the plan/execute API:
+
+    >>> import repro
+    >>> p = repro.plan(matrix, repro.PlanConfig(l=256, layout="auto"))
+    >>> y = p.spmv(v)     # schedule once (cached), execute many
+
+Everything else (formats, scheduler, packing, GustLinear, serving) hangs
+off the same lazy table below; submodules (``repro.core``, ``repro.serving``,
+...) import as usual.
+"""
+
+from typing import TYPE_CHECKING
+
+# symbol -> defining module; resolved on first attribute access
+_EXPORTS = {
+    # plan/execute API (the front door)
+    "plan": "repro.core.plan",
+    "GustPlan": "repro.core.plan",
+    "PlanConfig": "repro.core.plan",
+    "PlanCost": "repro.core.plan",
+    # formats + scheduler
+    "COOMatrix": "repro.core.formats",
+    "GustSchedule": "repro.core.formats",
+    "coo_from_dense": "repro.core.formats",
+    "dense_from_coo": "repro.core.formats",
+    "schedule": "repro.core.scheduler",
+    # packed layouts + cache
+    "PackedSchedule": "repro.core.packing",
+    "RaggedSchedule": "repro.core.packing",
+    "ScheduleCache": "repro.core.packing",
+    "clear_cache": "repro.core.packing",
+    # sparse LM serving
+    "GustLinear": "repro.core.gust_linear",
+    "SparsityConfig": "repro.core.gust_linear",
+    "prune_by_magnitude": "repro.core.gust_linear",
+    "GustServeConfig": "repro.serving.gust_serve",
+    # statistical bounds (paper Eqs. 9-11)
+    "expected_colors_bound": "repro.core.bounds",
+    "expected_execution_cycles": "repro.core.bounds",
+    "expected_utilization": "repro.core.bounds",
+    # legacy execution shims (deprecated spellings route through GustPlan)
+    "spmv": "repro.core.spmv",
+    "spmv_scheduled": "repro.core.spmv",
+    "spmm_scheduled": "repro.core.spmv",
+    "spmm_ragged": "repro.core.spmv",
+    "distributed_spmv": "repro.core.spmv",
+    "gust_spmm": "repro.kernels.ops",
+    "gust_spmm_auto": "repro.kernels.ops",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module_name = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") from None
+    import importlib
+
+    value = getattr(importlib.import_module(module_name), name)
+    globals()[name] = value  # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))
+
+
+if TYPE_CHECKING:  # static analyzers see the real symbols
+    from repro.core.bounds import (  # noqa: F401
+        expected_colors_bound,
+        expected_execution_cycles,
+        expected_utilization,
+    )
+    from repro.core.formats import (  # noqa: F401
+        COOMatrix,
+        GustSchedule,
+        coo_from_dense,
+        dense_from_coo,
+    )
+    from repro.core.gust_linear import (  # noqa: F401
+        GustLinear,
+        SparsityConfig,
+        prune_by_magnitude,
+    )
+    from repro.core.packing import (  # noqa: F401
+        PackedSchedule,
+        RaggedSchedule,
+        ScheduleCache,
+        clear_cache,
+    )
+    from repro.core.plan import GustPlan, PlanConfig, PlanCost, plan  # noqa: F401
+    from repro.core.scheduler import schedule  # noqa: F401
+    from repro.core.spmv import (  # noqa: F401
+        distributed_spmv,
+        spmm_ragged,
+        spmm_scheduled,
+        spmv,
+        spmv_scheduled,
+    )
+    from repro.kernels.ops import gust_spmm, gust_spmm_auto  # noqa: F401
+    from repro.serving.gust_serve import GustServeConfig  # noqa: F401

@@ -1,4 +1,5 @@
-"""GUST core: edge-coloring scheduler, scheduled SpMV, dataflow models."""
+"""GUST core: plan/execute API, edge-coloring scheduler, scheduled SpMV,
+dataflow models."""
 
 from .formats import COOMatrix, GustSchedule, coo_from_dense, dense_from_coo
 from .scheduler import schedule
@@ -13,6 +14,7 @@ from .packing import (
     ragged_waste_ratio,
     schedule_packed,
 )
+from .plan import GustPlan, PlanConfig, PlanCost, plan
 from .spmv import (
     spmv,
     spmv_scheduled,
@@ -33,6 +35,10 @@ __all__ = [
     "coo_from_dense",
     "dense_from_coo",
     "schedule",
+    "GustPlan",
+    "PlanConfig",
+    "PlanCost",
+    "plan",
     "PackedSchedule",
     "RaggedSchedule",
     "ScheduleCache",

@@ -29,7 +29,6 @@ from typing import Callable, Dict, Optional
 import numpy as np
 
 from .formats import COOMatrix
-from .scheduler import schedule
 
 __all__ = [
     "DesignReport",
@@ -106,12 +105,24 @@ def model_gust(
     *,
     load_balance: bool = True,
     method: str = "fast",
+    cache=None,
 ) -> DesignReport:
     """GUST with edge-coloring (and optionally load balancing): cycles from
-    the real scheduler — this is the paper's own evaluation path."""
-    sched = schedule(coo, l, load_balance=load_balance, method=method)
+    the real scheduler — this is the paper's own evaluation path.
+
+    Goes through :func:`repro.core.plan.plan` (packing is lazy, so a
+    cycle-count model never materializes blocks); pass a
+    :class:`~repro.core.packing.ScheduleCache` to share schedules with an
+    execution path over the same matrix."""
+    from .plan import PlanConfig, plan
+
+    p = plan(
+        coo,
+        PlanConfig(l=l, colorer=method, load_balance=load_balance),
+        cache=cache,
+    )
     name = "gust_ec_lb" if load_balance else "gust_ec"
-    return DesignReport(name, float(sched.cycles), 2 * l, coo.nnz)
+    return DesignReport(name, float(p.sched.cycles), 2 * l, coo.nnz)
 
 
 def model_gust_naive(coo: COOMatrix, l: int = 256) -> DesignReport:

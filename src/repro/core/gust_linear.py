@@ -2,9 +2,10 @@
 
 Decode-time LM inference is matvec-dominated: every projection computes
 ``W @ x`` for a handful of activation vectors.  ``GustLinear`` stores a
-magnitude-pruned weight matrix in the GUST scheduled format (schedule
-computed once, at weight-load time — paper §3.3/§5.3 amortization) and
-executes the matvec through the GUST path (pure-jnp or the Pallas kernel).
+magnitude-pruned weight matrix as a :class:`~repro.core.plan.GustPlan`
+(schedule computed once, at weight-load time — paper §3.3/§5.3
+amortization) and executes the matvec through the plan's batch-major
+``transpose_io`` fast path (no eager ``x.T``/``y.T`` round-trip).
 
 Training and prefill stay dense (the paper defers SpMM to future work);
 this module is wired into ``serving/`` via ``ArchConfig.sparsity``.
@@ -13,6 +14,7 @@ this module is wired into ``serving/`` via ``ArchConfig.sparsity``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -20,14 +22,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from .formats import COOMatrix
-from .packing import schedule_packed
+from .packing import default_cache
+from .plan import PlanConfig, plan as _plan
 
 __all__ = ["SparsityConfig", "GustLinear", "prune_by_magnitude"]
 
 
 @dataclasses.dataclass(frozen=True)
 class SparsityConfig:
-    """Serving-time weight-sparsity knobs (off by default)."""
+    """Deprecated serving-time weight-sparsity knobs.
+
+    Use :class:`~repro.core.plan.PlanConfig` plus a ``density`` argument:
+    ``gust_length`` is spelled ``PlanConfig.l``, ``method`` is
+    ``PlanConfig.colorer``, ``use_kernel`` is ``PlanConfig.backend``
+    (``"pallas"`` / ``"jnp"``).  Kept as a shim that normalizes to
+    :attr:`plan_config`."""
 
     enable: bool = False
     density: float = 0.1  # fraction of weights kept after magnitude pruning
@@ -35,6 +44,28 @@ class SparsityConfig:
     load_balance: bool = True
     method: str = "fast"  # edge-coloring method
     use_kernel: bool = False  # route through the Pallas kernel
+
+    def __post_init__(self):
+        warnings.warn(
+            "SparsityConfig is deprecated; use GustLinear(w, "
+            "config=PlanConfig(l=..., colorer=..., backend='pallas'|'jnp'), "
+            "density=...) — 'gust_length' is spelled 'l', 'method' is "
+            "'colorer', 'use_kernel' is backend='pallas'",
+            DeprecationWarning,
+            stacklevel=3,  # caller -> generated __init__ -> __post_init__
+        )
+
+    @property
+    def plan_config(self) -> PlanConfig:
+        """The normalized spelling of these knobs."""
+        return PlanConfig(
+            l=self.gust_length,
+            colorer=self.method,
+            load_balance=self.load_balance,
+            layout="padded",
+            backend="pallas" if self.use_kernel else "jnp",
+            interpret=True,
+        )
 
 
 def prune_by_magnitude(w: np.ndarray, density: float) -> np.ndarray:
@@ -48,11 +79,15 @@ def prune_by_magnitude(w: np.ndarray, density: float) -> np.ndarray:
 
 
 class GustLinear:
-    """y = W_sparse @ x with W in GUST scheduled format.
+    """y = W_sparse @ x with W held as a :class:`GustPlan`.
 
     Not a pytree — this is a *serving* artifact built once from trained
     weights (analogous to a compiled engine).  ``__call__`` takes
     ``x: (B, n)`` and returns ``(B, m)``.
+
+    Construction: ``GustLinear(w, config=PlanConfig(...), density=0.1)``.
+    The legacy positional ``SparsityConfig`` is still accepted and
+    normalized through :attr:`SparsityConfig.plan_config`.
 
     NOTE: construction goes through the process-global content-keyed
     :class:`~repro.core.packing.ScheduleCache`, so the schedule/packed
@@ -61,12 +96,34 @@ class GustLinear:
     :func:`repro.core.packing.clear_cache` to release the memory.
     """
 
-    def __init__(self, w: np.ndarray, cfg: SparsityConfig):
+    def __init__(
+        self,
+        w: np.ndarray,
+        cfg: Optional[SparsityConfig] = None,
+        *,
+        config: Optional[PlanConfig] = None,
+        density: Optional[float] = None,
+        cache=default_cache,
+    ):
         if w.ndim != 2:
             raise ValueError("GustLinear expects a 2-D weight matrix")
-        self.cfg = cfg
+        if cfg is not None:
+            if config is not None or density is not None:
+                raise ValueError(
+                    "pass either a legacy SparsityConfig or "
+                    "config=PlanConfig(...) + density=..., not both"
+                )
+            config = cfg.plan_config
+            density = cfg.density
+        if config is None:
+            config = PlanConfig(layout="padded", backend="jnp", interpret=True)
+        if density is None:
+            density = 0.1
+        self.cfg = cfg  # legacy handle (None for plan-config construction)
+        self.config = config
+        self.density = density
         self.shape = w.shape
-        w_pruned = prune_by_magnitude(np.asarray(w, np.float32), cfg.density)
+        w_pruned = prune_by_magnitude(np.asarray(w, np.float32), density)
         rows, cols = np.nonzero(w_pruned)
         coo = COOMatrix(
             w.shape,
@@ -75,12 +132,12 @@ class GustLinear:
             w_pruned[rows, cols].astype(np.float32),
         )
         self.nnz = coo.nnz
-        # Schedule AND pack once, at construction (content-keyed cache:
-        # rebuilding a GustLinear over identical weights is free).  The
-        # packed form is what both execution paths consume.
-        self.sched, self.packed = schedule_packed(
-            coo, cfg.gust_length, load_balance=cfg.load_balance, method=cfg.method
-        )
+        # Plan once, at construction (content-keyed cache: rebuilding a
+        # GustLinear over identical weights is free).  Touching .artifact
+        # packs eagerly — both execution paths consume the packed form.
+        self.plan = _plan(coo, config, cache=cache)
+        self.sched = self.plan.sched
+        self.packed = self.plan.artifact
 
     @property
     def cycles(self) -> int:
@@ -96,7 +153,7 @@ class GustLinear:
             squeeze = True
         else:
             squeeze = False
-        from repro.kernels import ops as kops
-
-        y = kops.gust_spmm(self.packed, x.T, use_kernel=self.cfg.use_kernel).T
+        # batch-major fast path: both transposes live inside the jitted
+        # executor instead of materializing (n, B)/(B, m) copies here
+        y = self.plan.spmm(x, transpose_io=True)
         return y[0] if squeeze else y

@@ -10,6 +10,13 @@ O(nnz) numpy work even for schedules with 10⁵ windows.
 Scheduled format lifecycle
 --------------------------
 
+The front door for all of this is the plan/execute API
+(:mod:`repro.core.plan`): ``repro.plan(matrix, PlanConfig(...))`` runs
+steps 1-2 once (through the cache of step 4) and returns a
+:class:`~repro.core.plan.GustPlan` whose ``.spmv``/``.spmm``/``.shard``
+run step 3 any number of times — the paper's schedule-once/execute-many
+contract as a type.  The steps themselves:
+
 1. **Schedule (ragged).**  ``core.scheduler.schedule`` edge-colors the
    bipartite window graphs and emits a :class:`~repro.core.formats.
    GustSchedule`: three ``(C_total, l)`` arrays plus the per-window color
@@ -54,21 +61,23 @@ Scheduled format lifecycle
    ``repad_to_blocks``, layer stacking, window padding for the
    distributed split) must preserve all of the above.
 
-3. **Execute.**  ``kernels.ops.gust_spmm`` (Pallas or XLA, padded *and*
-   ragged), ``core.spmv.distributed_spmv`` (k parallel length-l GUSTs,
-   sharded by equal block counts), and
-   ``serving.gust_serve.decode_step_gust`` all stream the packed blocks.
-   Serving stacks per-layer packs along a leading reps axis after
-   :meth:`PackedSchedule.repad_to` (or :meth:`RaggedSchedule.
-   repad_to_blocks`) equalizes the stream length; the leaves/meta codec
-   (:func:`packed_leaves` / :func:`packed_meta` /
-   :func:`packed_from_leaves`, and the ragged twins) is the one wire
+3. **Execute.**  ``kernels.ops.execute_spmm`` (Pallas or XLA, padded
+   *and* ragged) streams the packed blocks; every entry point reaches it
+   through :meth:`GustPlan.spmm`/:meth:`GustPlan.spmv` — including
+   sharded execution (:meth:`GustPlan.shard`: k parallel length-l GUSTs
+   over window ranges balanced by block count) and
+   ``serving.gust_serve.decode_step_gust``.  Serving stacks per-layer
+   plans with :meth:`GustPlan.stack` (equalizing stream length via
+   :meth:`PackedSchedule.repad_to` / :meth:`RaggedSchedule.
+   repad_to_blocks`); the leaves/meta codec (:func:`packed_leaves` /
+   :func:`packed_meta` / :func:`packed_from_leaves`, and the ragged
+   twins) backs :meth:`GustPlan.to_spec`/``from_spec`` — the one wire
    format shared by ``gustify`` and the multi-pod dry-run specs.
 
-4. **Cache.**  :class:`ScheduleCache` (module-level instance behind
-   :func:`schedule_packed`) keys schedule+pack results on matrix
-   *content*, so serving/benchmark paths that re-derive the same pruned
-   matrix pay for scheduling exactly once.
+4. **Cache.**  :class:`ScheduleCache` (module-level ``default_cache``
+   that :func:`repro.core.plan.plan` schedules and packs through) keys
+   results on matrix *content*, so serving/benchmark paths that
+   re-derive the same pruned matrix pay for scheduling exactly once.
 """
 
 from __future__ import annotations
@@ -92,6 +101,7 @@ __all__ = [
     "pack_ragged",
     "pack_auto",
     "DEFAULT_WASTE_THRESHOLD",
+    "resolve_layout",
     "ragged_waste_ratio",
     "packed_spec",
     "ragged_spec",
@@ -488,32 +498,42 @@ def pack_ragged(
 
 
 #: Padded-stream waste (``W * C_pad`` over ``T_blk * c_blk``) above which
-#: the ragged layout is chosen — the one source of truth for ``pack_auto``,
-#: ``ScheduleCache.auto_for`` and ``gust_spmm_auto``.
+#: the ragged layout is chosen — consumed only through
+#: :func:`resolve_layout`, the one waste-threshold decision point.
 DEFAULT_WASTE_THRESHOLD = 2.0
+
+
+def resolve_layout(
+    sched: GustSchedule, c_blk: int = 8, waste_threshold: float = None
+) -> str:
+    """The one layout='auto' decision point: ``"ragged"`` when the padded
+    layout would stream ``>= waste_threshold`` times more (cycle, lane)
+    slots than the ragged stream (skewed matrices), else ``"padded"``
+    (near-uniform windows, where the simpler 2-D-grid padded kernel
+    wins).  ``waste_threshold=None`` means :data:`DEFAULT_WASTE_THRESHOLD`.
+    Every auto caller — :func:`pack_auto`, :meth:`ScheduleCache.auto_for`,
+    ``GustPlan.layout`` — delegates here."""
+    if waste_threshold is None:
+        waste_threshold = DEFAULT_WASTE_THRESHOLD
+    return (
+        "ragged"
+        if ragged_waste_ratio(sched, c_blk) >= waste_threshold
+        else "padded"
+    )
 
 
 def pack_auto(
     sched: GustSchedule, c_blk: int = 8, *, waste_threshold: float = None,
     value_dtype=jnp.float32, index_dtype=jnp.int32,
 ):
-    """Pick the execution layout by measured padding waste.
-
-    Returns :func:`pack_ragged` output when the padded layout would stream
-    ``>= waste_threshold`` times more (cycle, lane) slots than the ragged
-    stream (skewed matrices), else :func:`pack_schedule` output (near-
-    uniform windows, where the simpler 2-D-grid padded kernel wins).  Only
-    the chosen layout is materialized.  ``waste_threshold=None`` means
-    :data:`DEFAULT_WASTE_THRESHOLD` (shared with every auto caller)."""
-    if waste_threshold is None:
-        waste_threshold = DEFAULT_WASTE_THRESHOLD
-    if ragged_waste_ratio(sched, c_blk) >= waste_threshold:
-        return pack_ragged(
-            sched, c_blk, value_dtype=value_dtype, index_dtype=index_dtype
-        )
-    return pack_schedule(
-        sched, c_blk, value_dtype=value_dtype, index_dtype=index_dtype
+    """Pick the execution layout by measured padding waste
+    (:func:`resolve_layout`) and materialize only the chosen one."""
+    fn = (
+        pack_ragged
+        if resolve_layout(sched, c_blk, waste_threshold) == "ragged"
+        else pack_schedule
     )
+    return fn(sched, c_blk, value_dtype=value_dtype, index_dtype=index_dtype)
 
 
 def packed_spec(
@@ -819,14 +839,12 @@ class ScheduleCache:
         waste_threshold: float = None, value_dtype=jnp.float32,
         index_dtype=jnp.int32,
     ):
-        """Cached twin of :func:`pack_auto`: one waste-ratio decision,
-        delegated to :meth:`ragged_for` / :meth:`pack_for` so the chosen
-        layout is memoized on schedule content."""
-        if waste_threshold is None:
-            waste_threshold = DEFAULT_WASTE_THRESHOLD
+        """Cached twin of :func:`pack_auto`: the :func:`resolve_layout`
+        decision, delegated to :meth:`ragged_for` / :meth:`pack_for` so
+        the chosen layout is memoized on schedule content."""
         route = (
             self.ragged_for
-            if ragged_waste_ratio(sched, c_blk) >= waste_threshold
+            if resolve_layout(sched, c_blk, waste_threshold) == "ragged"
             else self.pack_for
         )
         return route(
@@ -849,13 +867,19 @@ default_cache = ScheduleCache()
 
 
 def clear_cache() -> None:
-    """Drop every cached schedule/packed entry of the module-level cache.
+    """Drop every cached schedule/packed entry of the module-level cache
+    (and the ``spmm_scheduled`` shim's identity-keyed plan memo).
 
     Cached entries hold device arrays (tens of MB per LLM-scale matrix, up
     to ``maxsize`` of them) for the process lifetime; call this after a
     one-shot conversion (e.g. ``gustify`` at weight-load time) if the
     memory matters more than re-schedule speed."""
     default_cache.clear()
+    # late import via importlib: spmv imports this module, and the package
+    # namespace shadows the submodule with the spmv *function*
+    import importlib
+
+    importlib.import_module(__package__ + ".spmv")._SHIM_PLANS.clear()
 
 
 def schedule_packed(

@@ -1,0 +1,690 @@
+"""GustPlan — the one plan/execute API for every schedule→pack→run path.
+
+The paper's amortization story (§3.3/§5.3) is an FFTW-style *plan*: at
+matrix-load time you pay once for the edge-coloring schedule and the
+packed execution layout, then execute against any number of vectors.
+Before this module that contract was implicit and scattered across seven
+entry points (``spmv``, ``spmm_scheduled``, ``spmm_ragged``,
+``distributed_spmv``, ``gust_spmm``/``gust_spmm_auto``, ``GustLinear``,
+serving), each re-threading its own copy of the layout/backend knobs.
+Here it is explicit in the type system:
+
+    >>> import repro
+    >>> p = repro.plan(matrix, repro.PlanConfig(l=256, layout="auto"))
+    >>> y = p.spmv(v)            # execute many times against one plan
+    >>> Y = p.spmm(X)            # multi-vector (decode-batch) execution
+    >>> p.shard(mesh).spmv(v)    # k parallel length-l GUSTs (paper §5.5)
+    >>> p.cost()                 # measured + Eq. 9-11 predicted cost
+    >>> spec = p.to_spec()       # leaves/meta wire format (serving stacks)
+
+Decision points owned by the plan (and nowhere else):
+
+  * **layout** — ``padded`` (dense ``(W, C_pad)`` grid), ``ragged`` (block
+    stream of only real cycle blocks), or ``auto`` (pick by the measured
+    padding-waste ratio, :data:`~repro.core.packing.DEFAULT_WASTE_THRESHOLD`).
+  * **backend** — ``jnp`` (pure-XLA segment-sum), ``pallas`` (fused TPU
+    kernel), or ``auto`` (Pallas on TPU when the schedule is fusable).
+  * **dtype policy** — value/index leaf dtypes (``bfloat16``/``int16``
+    halve the streamed bytes, the paper's packed-word analogue).
+  * **sharding** — :meth:`GustPlan.shard` owns the device-major layout
+    memoization that ``distributed_spmv`` used to hand-roll.
+
+Packing is lazy: a plan schedules eagerly (the expensive, cache-shared
+step) and materializes its packed artifact on first execution, so
+schedule-only consumers (cycle models, cost estimates) never pay for
+blocks they don't stream.  All caching is content-keyed through
+:class:`~repro.core.packing.ScheduleCache`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import COOMatrix, GustSchedule, coo_from_dense
+from .packing import (
+    PackedSchedule,
+    RaggedSchedule,
+    ScheduleCache,
+    default_cache,
+    pack_ragged,
+    pack_schedule,
+    packed_from_leaves,
+    packed_leaves,
+    packed_meta,
+    packed_spec,
+    ragged_from_leaves,
+    ragged_leaves,
+    ragged_meta,
+    ragged_spec,
+    ragged_waste_ratio,
+    resolve_layout,
+)
+
+__all__ = ["PlanConfig", "PlanCost", "GustPlan", "plan"]
+
+_LAYOUTS = ("padded", "ragged", "auto")
+_BACKENDS = ("jnp", "pallas", "auto")
+_COLORERS = ("paper", "fast", "exact")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanConfig:
+    """Every knob of the schedule→pack→execute pipeline, in one frozen type.
+
+    Attributes:
+      l:               GUST length (number of multipliers == adders).
+      colorer:         edge-coloring method — ``paper`` (Listing 1 greedy),
+                       ``fast`` (vectorized equivalent), ``exact`` (König
+                       Δ-coloring).
+      load_balance:    apply the §3.5 row/lane balancing permutations.
+      c_blk:           cycle-block height (pack granularity and padded-
+                       kernel VMEM blocking).
+      layout:          ``padded`` | ``ragged`` | ``auto`` (measured waste).
+      backend:         ``jnp`` | ``pallas`` | ``auto`` (Pallas on TPU when
+                       the schedule is fusable).
+      waste_threshold: padded/ragged stream ratio above which ``auto``
+                       picks ragged; ``None`` = the shared default.
+      value_dtype:     dtype name of the value leaves (``float32`` |
+                       ``bfloat16``).
+      index_dtype:     dtype name of the index leaves (``int32`` |
+                       ``int16``).
+      interpret:       Pallas interpret mode; ``None`` = interpret off TPU.
+      mesh_axis:       default mesh axis name for :meth:`GustPlan.shard`.
+    """
+
+    l: int = 256
+    colorer: str = "fast"
+    load_balance: bool = True
+    c_blk: int = 8
+    layout: str = "auto"
+    backend: str = "auto"
+    waste_threshold: Optional[float] = None
+    value_dtype: str = "float32"
+    index_dtype: str = "int32"
+    interpret: Optional[bool] = None
+    mesh_axis: str = "data"
+
+    def __post_init__(self):
+        if self.l < 1:
+            raise ValueError(f"l must be >= 1, got {self.l}")
+        if self.c_blk < 1:
+            raise ValueError(f"c_blk must be >= 1, got {self.c_blk}")
+        if self.layout not in _LAYOUTS:
+            raise ValueError(f"layout must be one of {_LAYOUTS}, got {self.layout!r}")
+        if self.backend not in _BACKENDS:
+            raise ValueError(
+                f"backend must be one of {_BACKENDS}, got {self.backend!r}"
+            )
+        if self.colorer not in _COLORERS:
+            raise ValueError(
+                f"colorer must be one of {_COLORERS}, got {self.colorer!r}"
+            )
+        # normalize dtypes to canonical names so configs hash/compare/
+        # serialize stably whether built from strings or jnp dtypes
+        object.__setattr__(self, "value_dtype", jnp.dtype(self.value_dtype).name)
+        object.__setattr__(self, "index_dtype", jnp.dtype(self.index_dtype).name)
+
+    @property
+    def value_jnp(self):
+        return jnp.dtype(self.value_dtype)
+
+    @property
+    def index_jnp(self):
+        return jnp.dtype(self.index_dtype)
+
+    def to_dict(self) -> Dict:
+        """Plain-JSON form (the config part of :meth:`GustPlan.to_spec`)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "PlanConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCost:
+    """Measured + predicted cost of one plan (wraps ``core.bounds``).
+
+    ``cycles``/``utilization`` come from the *actual* schedule (the paper's
+    own evaluation path); ``waste_ratio`` is the measured padded/ragged
+    stream ratio that drives the ``auto`` layout choice; ``expected_*``
+    are the Eq. 9-11 statistical bounds at the matrix's measured density.
+    """
+
+    cycles: int
+    utilization: float
+    waste_ratio: float
+    layout: str
+    streamed_slots: int
+    stream_bytes: int
+    density: float
+    expected_colors: float
+    expected_cycles: float
+    expected_utilization: float
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def plan(
+    matrix: Union[np.ndarray, COOMatrix, GustSchedule],
+    config: Optional[PlanConfig] = None,
+    *,
+    cache: Optional[ScheduleCache] = default_cache,
+    **overrides,
+) -> "GustPlan":
+    """Schedule ``matrix`` once and return an executable :class:`GustPlan`.
+
+    ``matrix`` may be a dense 2-D array (numpy or jax), a
+    :class:`COOMatrix`, or an already-built :class:`GustSchedule` (whose
+    ``l`` wins over the config's).  Scheduling is served from ``cache`` (content-keyed; pass
+    ``cache=None`` to bypass), so two plans over the same matrix schedule
+    exactly once.  Keyword ``overrides`` are applied on top of ``config``:
+    ``plan(m, l=64, layout="ragged")``.
+    """
+    if config is None:
+        config = PlanConfig()
+    if overrides:
+        config = dataclasses.replace(config, **overrides)
+
+    if isinstance(matrix, GustSchedule):
+        sched = matrix
+        if sched.l != config.l:
+            config = dataclasses.replace(config, l=sched.l)
+        return GustPlan(config, sched=sched, cache=cache)
+
+    if isinstance(matrix, (np.ndarray, jax.Array)):
+        dense = np.asarray(matrix)
+        if dense.ndim != 2:
+            raise ValueError(f"dense matrix must be 2-D, got shape {dense.shape}")
+        matrix = coo_from_dense(dense)
+    if not isinstance(matrix, COOMatrix):
+        raise TypeError(
+            "plan() takes a dense (numpy or jax) array, a COOMatrix or a "
+            f"GustSchedule; got {type(matrix).__name__}"
+        )
+    if cache is None:
+        from .scheduler import schedule as _schedule
+
+        sched = _schedule(
+            matrix, config.l, load_balance=config.load_balance,
+            method=config.colorer,
+        )
+    else:
+        sched = cache.schedule(
+            matrix, config.l, load_balance=config.load_balance,
+            method=config.colorer,
+        )
+    return GustPlan(config, sched=sched, cache=cache)
+
+
+class GustPlan:
+    """Executable GUST artifact: schedule + packed layout + backend choice.
+
+    Built by :func:`plan` (or :meth:`from_spec` / :meth:`from_artifact`).
+    The plan owns the scheduled and packed artifacts for one matrix and is
+    the single internal execution route — every legacy entry point
+    (``spmv``, ``gust_spmm``, ``GustLinear``, serving, ...) constructs one
+    and delegates to :meth:`spmv` / :meth:`spmm`.
+
+    Not a pytree: like a compiled FFTW/cuDNN plan this is a host-side
+    handle; its array leaves (``.artifact``) are the pytree that crosses
+    into jit.
+    """
+
+    def __init__(
+        self,
+        config: PlanConfig,
+        *,
+        sched: Optional[GustSchedule] = None,
+        artifact: Optional[Union[PackedSchedule, RaggedSchedule]] = None,
+        cache: Optional[ScheduleCache] = None,
+        mesh=None,
+        axis: Optional[str] = None,
+    ):
+        if sched is None and artifact is None:
+            raise ValueError("a GustPlan needs a schedule or a packed artifact")
+        self.config = config
+        self.sched = sched
+        self.cache = cache
+        self.mesh = mesh
+        self.axis = axis
+        self._artifact = artifact
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        src = self.sched if self.sched is not None else self._artifact
+        return src.shape
+
+    @property
+    def l(self) -> int:
+        return self.config.l
+
+    @property
+    def layout(self) -> str:
+        """Resolved layout (``auto`` is decided at pack time)."""
+        if self._artifact is not None:
+            return (
+                "ragged" if isinstance(self._artifact, RaggedSchedule) else "padded"
+            )
+        if self.config.layout != "auto":
+            return self.config.layout
+        return resolve_layout(
+            self.sched, self.config.c_blk, self.config.waste_threshold
+        )
+
+    @property
+    def artifact(self) -> Union[PackedSchedule, RaggedSchedule]:
+        """The packed execution layout; materialized lazily on first use."""
+        if self._artifact is None:
+            self._artifact = self._pack()
+        return self._artifact
+
+    def _pack(self):
+        c = self.config
+        layout = self.layout  # resolves "auto" from the measured waste
+        if self.cache is not None:
+            route = (
+                self.cache.ragged_for if layout == "ragged" else self.cache.pack_for
+            )
+            return route(
+                self.sched, c_blk=c.c_blk, value_dtype=c.value_jnp,
+                index_dtype=c.index_jnp,
+            )
+        fn = pack_ragged if layout == "ragged" else pack_schedule
+        return fn(
+            self.sched, c.c_blk, value_dtype=c.value_jnp, index_dtype=c.index_jnp
+        )
+
+    def _use_kernel(self) -> bool:
+        if self.config.backend == "pallas":
+            return True
+        if self.config.backend == "jnp":
+            return False
+        return bool(self.artifact.fusable and jax.default_backend() == "tpu")
+
+    def _interpret(self) -> bool:
+        if self.config.interpret is not None:
+            return self.config.interpret
+        return jax.default_backend() != "tpu"
+
+    # -- execution ---------------------------------------------------------
+
+    def spmm(self, x: jnp.ndarray, *, transpose_io: bool = False) -> jnp.ndarray:
+        """Multi-vector execution: ``x (n, B) -> y (m, B)``.
+
+        With ``transpose_io=True`` the batch dimension leads instead —
+        ``x (B, n) -> y (B, m)`` — and both transposes happen *inside* the
+        jitted executor, where XLA fuses them into the gather/scatter.
+        Callers that are batch-major (``GustLinear``, most LM decode
+        paths) previously paid two eagerly-materialized ``.T`` copies per
+        call; this fast path removes that round-trip bit-identically.
+        """
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "sharded plans execute single vectors; use .spmv(v) "
+                "(the §5.5 row-window split concatenates per-device outputs)"
+            )
+        from repro.kernels.ops import execute_spmm
+
+        return execute_spmm(
+            self.artifact,
+            x,
+            use_kernel=self._use_kernel(),
+            interpret=self._interpret(),
+            c_blk=self.config.c_blk,
+            transpose_io=transpose_io,
+        )
+
+    def spmv(self, v: jnp.ndarray) -> jnp.ndarray:
+        """Single-vector execution: ``v (n,) -> y (m,)``.  On a sharded
+        plan (:meth:`shard`) this runs k parallel length-l GUSTs over
+        contiguous window ranges and concatenates collectives-free."""
+        v = jnp.asarray(v)
+        m, n = self.shape
+        if v.shape != (n,):
+            raise ValueError(f"vector shape {v.shape} != ({n},)")
+        if self.mesh is not None:
+            return self._spmv_sharded(v)
+        return self.spmm(v[:, None])[:, 0]
+
+    # -- distributed execution (absorbs distributed_spmv) --------------------
+
+    def shard(self, mesh, axis: Optional[str] = None) -> "GustPlan":
+        """Return a plan that executes as ``mesh.shape[axis]`` parallel
+        length-l GUSTs (paper §5.5: "the Edge-Coloring schedule would not
+        need to change").  Devices get contiguous window ranges balanced
+        by ragged-stream *block count* (not window count — equal-window
+        splits leave most devices idle on skewed matrices).
+
+        The device-major layout (host assembly + upload) is memoized in
+        the plan's :class:`ScheduleCache` next to the pack, so repeated
+        executions only run the shard_map.  Sharding requires the ragged
+        stream; a padded plan re-packs ragged through the cache.
+        """
+        axis = axis if axis is not None else self.config.mesh_axis
+        ragged_art = (
+            self._artifact
+            if isinstance(self._artifact, RaggedSchedule)
+            else None
+        )
+        if ragged_art is None and self.sched is None:
+            raise ValueError(
+                "cannot shard a padded spec-plan: the ragged stream needs "
+                "the schedule (build the plan with plan(...) or a ragged "
+                "artifact)"
+            )
+        # artifact stays lazy (None unless already ragged): when the
+        # device-major layout below is served from the cache, the ragged
+        # pack is never even materialized on this host
+        return GustPlan(
+            dataclasses.replace(self.config, layout="ragged", mesh_axis=axis),
+            sched=self.sched,
+            artifact=ragged_art,
+            cache=self.cache,
+            mesh=mesh,
+            axis=axis,
+        )
+
+    def _spmv_sharded(self, v: jnp.ndarray) -> jnp.ndarray:
+        c = self.config
+        n_dev = self.mesh.shape[self.axis]
+        if self.cache is not None and self.sched is not None:
+            # one memo entry per (schedule content, c_blk, dtypes, n_dev);
+            # the build closure touches .artifact, so a memo hit skips the
+            # ragged pack entirely
+            layout = self.cache.memo(
+                ("shard_layout", self.cache.schedule_key(self.sched),
+                 c.c_blk, c.value_dtype, c.index_dtype, n_dev),
+                lambda: _shard_layout(self.artifact, n_dev),
+            )
+        else:
+            layout = _shard_layout(self.artifact, n_dev)
+        m_d, r_d, c_d, lw_d, w_max, idx = layout
+        fn = _shard_spmv_fn(self.mesh, self.axis, c.l, c.c_blk, w_max)
+        y_dev = fn(m_d, r_d, c_d, lw_d, v)
+        # Reassemble: device d's first w_cnt[d]*l rows are its window range
+        # in order (collectives-free concatenation), then undo the
+        # load-balancing row sort.
+        m = self.shape[0]
+        if self.sched is not None:
+            y_sorted = y_dev.reshape(-1)[idx][:m]
+            return jnp.zeros((m,), jnp.float32).at[
+                jnp.asarray(self.sched.row_perm)
+            ].set(y_sorted)
+        a = self.artifact
+        y_all = y_dev.reshape(-1)[idx]
+        out = jnp.zeros((max(m, a.num_windows * a.l),), jnp.float32)
+        return out.at[jnp.asarray(a.row_perm)].set(y_all)[:m]
+
+    # -- multi-layer serving -------------------------------------------------
+
+    @staticmethod
+    def stack(plans: Sequence["GustPlan"]) -> Dict:
+        """Stack the packed artifacts of ``plans`` (one per layer) along a
+        leading reps axis for the serving layer-scan: layers are equalized
+        to a uniform stream length first (``repad_to`` / ``repad_to_blocks``
+        preserve the padding invariants and leaf dtypes).  Returns the
+        ``{"leaves", "meta"}`` wire format consumed by
+        ``serving.gust_serve.decode_step_gust`` and :meth:`from_spec`."""
+        arts = [p.artifact if isinstance(p, GustPlan) else p for p in plans]
+        if not arts:
+            raise ValueError("stack() needs at least one plan")
+        ragged = isinstance(arts[0], RaggedSchedule)
+        if any(isinstance(a, RaggedSchedule) != ragged for a in arts):
+            raise ValueError("cannot stack mixed padded/ragged layouts")
+        if ragged:
+            t_uniform = max(a.num_blocks for a in arts)
+            arts = [a.repad_to_blocks(t_uniform) for a in arts]
+            leaf_fn, meta = ragged_leaves, ragged_meta(arts[0])
+        else:
+            c_uniform = max(a.c_pad for a in arts)
+            arts = [a.repad_to(c_uniform) for a in arts]
+            leaf_fn, meta = packed_leaves, packed_meta(arts[0])
+        leaves = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[leaf_fn(a) for a in arts]
+        )
+        return {"leaves": leaves, "meta": meta}
+
+    # -- serialization (the leaves/meta codec) -------------------------------
+
+    def to_spec(self) -> Dict:
+        """``{"leaves", "meta", "config"}`` — the one wire format (shared
+        with serving stacks and dry-run specs).  ``leaves`` are the array
+        (or ShapeDtypeStruct) pytree at their exact dtypes; ``meta`` +
+        ``config`` are static and JSON-able."""
+        a = self.artifact
+        if isinstance(a, RaggedSchedule):
+            leaves, meta = ragged_leaves(a), ragged_meta(a)
+        else:
+            leaves, meta = packed_leaves(a), packed_meta(a)
+        return {"leaves": leaves, "meta": meta, "config": self.config.to_dict()}
+
+    @classmethod
+    def from_spec(
+        cls,
+        spec: Dict,
+        *,
+        config: Optional[PlanConfig] = None,
+        cache: Optional[ScheduleCache] = None,
+    ) -> "GustPlan":
+        """Rebuild a plan from :meth:`to_spec` output (or one layer's slice
+        of a :meth:`stack`).  The schedule itself is not serialized — a
+        deserialized plan executes but cannot re-pack or shard."""
+        meta = tuple(spec["meta"])
+        if meta and meta[0] == "ragged":
+            artifact = ragged_from_leaves(spec["leaves"], meta)
+        else:
+            artifact = packed_from_leaves(spec["leaves"], meta)
+        if config is None:
+            cfg_dict = spec.get("config")
+            config = (
+                PlanConfig.from_dict(cfg_dict) if cfg_dict else PlanConfig()
+            )
+        return cls.from_artifact(artifact, config=config, cache=cache)
+
+    @classmethod
+    def from_artifact(
+        cls,
+        artifact: Union[PackedSchedule, RaggedSchedule],
+        *,
+        config: Optional[PlanConfig] = None,
+        backend: Optional[str] = None,
+        interpret: Optional[bool] = None,
+        c_blk: Optional[int] = None,
+        cache: Optional[ScheduleCache] = None,
+        sched: Optional[GustSchedule] = None,
+    ) -> "GustPlan":
+        """Wrap an already-packed layout in a plan (the route every legacy
+        packed-entry shim takes).  Layout/geometry/dtypes are read off the
+        artifact; ``backend``/``interpret``/``c_blk`` override the config."""
+        if config is None:
+            config = PlanConfig()
+        ragged = isinstance(artifact, RaggedSchedule)
+        config = dataclasses.replace(
+            config,
+            l=artifact.l,
+            layout="ragged" if ragged else "padded",
+            c_blk=artifact.c_blk if ragged else (
+                c_blk if c_blk is not None else config.c_blk
+            ),
+            backend=backend if backend is not None else config.backend,
+            interpret=interpret if interpret is not None else config.interpret,
+            value_dtype=jnp.dtype(artifact.m_blk.dtype).name,
+            index_dtype=jnp.dtype(artifact.col_blk.dtype).name,
+        )
+        return cls(config, sched=sched, artifact=artifact, cache=cache)
+
+    @classmethod
+    def spec_for(
+        cls, m: int, n: int, config: PlanConfig, *, colors: float
+    ) -> "GustPlan":
+        """Shape-only plan (ShapeDtypeStruct leaves, no allocation) with
+        the scheduled stream sized from a per-window color-count estimate
+        — typically the Eq. 9 bound.  This is how the multi-pod dry-run
+        lowers the GUST decode path without running the scheduler."""
+        c = config
+        layout = "padded" if c.layout == "auto" else c.layout
+        cpb = max(-(-int(np.ceil(colors)) // c.c_blk), 1)
+        if layout == "ragged":
+            num_blocks = max(-(-m // c.l), 1) * cpb
+            artifact = ragged_spec(
+                m, n, c.l, num_blocks, c_blk=c.c_blk,
+                value_dtype=c.value_jnp, index_dtype=c.index_jnp,
+            )
+        else:
+            artifact = packed_spec(
+                m, n, c.l, cpb * c.c_blk,
+                value_dtype=c.value_jnp, index_dtype=c.index_jnp,
+            )
+        return cls(
+            dataclasses.replace(c, layout=layout), artifact=artifact
+        )
+
+    # -- cost ----------------------------------------------------------------
+
+    def cost(self) -> PlanCost:
+        """Measured schedule cost + Eq. 9-11 predictions for this plan."""
+        from .bounds import (
+            expected_colors_bound,
+            expected_execution_cycles,
+            expected_utilization,
+        )
+
+        if self.sched is None:
+            raise ValueError(
+                "cost() needs the schedule; deserialized/spec plans carry "
+                "only the packed artifact"
+            )
+        m, n = self.shape
+        density = self.sched.nnz / float(m * n) if m and n else 0.0
+        a = self.artifact
+        streamed = (
+            a.streamed_slots
+            if isinstance(a, RaggedSchedule)
+            else int(np.prod(a.m_blk.shape))
+        )
+        return PlanCost(
+            cycles=self.sched.cycles,
+            utilization=self.sched.hardware_utilization,
+            waste_ratio=ragged_waste_ratio(self.sched, self.config.c_blk),
+            layout=self.layout,
+            streamed_slots=streamed,
+            stream_bytes=a.stream_bytes,
+            density=density,
+            expected_colors=float(expected_colors_bound(n, density, self.l)),
+            expected_cycles=float(expected_execution_cycles(n, density, self.l)),
+            expected_utilization=float(expected_utilization(n, density, self.l)),
+        )
+
+    def __repr__(self) -> str:
+        m, n = self.shape
+        packed = "lazy" if self._artifact is None else self.layout
+        shard = f", sharded[{self.axis}]" if self.mesh is not None else ""
+        return (
+            f"GustPlan({m}x{n}, l={self.l}, layout={self.config.layout}"
+            f"->{packed}, backend={self.config.backend}{shard})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Distributed execution internals (owned by GustPlan.shard; formerly
+# hand-rolled by core.spmv.distributed_spmv).
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def _shard_spmv_fn(mesh, axis: str, l: int, c_blk: int, w_max: int):
+    """Jitted shard_map program for one (mesh, geometry) — memoized so
+    repeated sharded executions reuse jax's trace/compile cache instead of
+    paying a fresh closure trace every call."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.collectives import shard_map
+
+    def local(m_blk, r_blk, c_blk_, lw, vec):
+        # (1, B_max*cb, l) stream + (1, B_max) local window ids ->
+        # per-window segment sum -> (1, W_max * l)
+        p = m_blk[0].astype(jnp.float32) * jnp.take(
+            vec, c_blk_[0], axis=0, mode="clip"
+        )
+        window = jnp.repeat(lw[0], c_blk)
+        adder = window[:, None] * l + r_blk[0]
+        return jax.ops.segment_sum(
+            p.reshape(-1), adder.reshape(-1), num_segments=w_max * l
+        )[None]
+
+    spec_in = P(axis)  # shard the leading device dim
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(spec_in, spec_in, spec_in, spec_in, P()),
+            out_specs=spec_in,
+        )
+    )
+
+
+def _shard_layout(ragged: RaggedSchedule, n_dev: int):
+    """Device-major execution layout of a ragged stream for ``n_dev``
+    devices: contiguous window ranges balanced by block count, each
+    device's blocks padded to the common max.
+
+    Returns ``(m_d, r_d, c_d, lw_d, w_max, idx)`` — the four ``(n_dev,
+    ...)`` device arrays for the shard_map, the padded per-device window
+    count, and the gather index reassembling the per-device outputs into
+    scheduled row order.  Everything here is a pure function of (ragged
+    stream, n_dev); :meth:`GustPlan.shard` memoizes it in the
+    :class:`ScheduleCache` so repeated executions skip both the host
+    assembly and the host->device upload."""
+    l, W, cb, t_blk = ragged.l, ragged.num_windows, ragged.c_blk, ragged.num_blocks
+    block_starts = np.asarray(ragged.block_starts, np.int64)
+    block_window = np.asarray(ragged.block_window, np.int64)
+
+    # Contiguous window boundaries hitting equal block-count targets:
+    # device d owns windows [w_bound[d], w_bound[d+1]).
+    targets = (np.arange(1, n_dev) * t_blk) // n_dev
+    w_bound = np.concatenate(
+        [[0], np.searchsorted(block_starts, targets, side="left"), [W]]
+    )
+    w_bound = np.maximum.accumulate(np.minimum(w_bound, W))
+    w_cnt = np.diff(w_bound)
+    b_cnt = block_starts[w_bound[1:]] - block_starts[w_bound[:-1]]
+    b_max = max(int(b_cnt.max()) if n_dev else 1, 1)
+    w_max = max(int(w_cnt.max()) if n_dev else 1, 1)
+
+    # Device-major padded streams; padding blocks keep the packed-format
+    # invariants (values 0, columns gather the slot's lane, rows 0) and
+    # route to local window 0 — value 0 contributes nothing.
+    lane = np.arange(l, dtype=np.int32)
+    m_d = np.zeros((n_dev, b_max * cb, l), np.float32)
+    r_d = np.zeros((n_dev, b_max * cb, l), np.int32)
+    c_d = np.broadcast_to(lane, (n_dev, b_max * cb, l)).copy()
+    lw_d = np.zeros((n_dev, b_max), np.int32)
+    m_src = np.asarray(ragged.m_blk, np.float32)
+    r_src = np.asarray(ragged.row_blk, np.int32)
+    c_src = np.asarray(ragged.col_blk, np.int32)
+    for d in range(n_dev):
+        g0, g1 = int(block_starts[w_bound[d]]), int(block_starts[w_bound[d + 1]])
+        rows = (g1 - g0) * cb
+        m_d[d, :rows] = m_src[g0 * cb: g1 * cb]
+        r_d[d, :rows] = r_src[g0 * cb: g1 * cb]
+        c_d[d, :rows] = c_src[g0 * cb: g1 * cb]
+        lw_d[d, : g1 - g0] = block_window[g0:g1] - w_bound[d]
+
+    idx = np.concatenate(
+        [d * w_max * l + np.arange(w_cnt[d] * l) for d in range(n_dev)]
+    ) if W else np.zeros(0, np.int64)
+    return (
+        jnp.asarray(m_d), jnp.asarray(r_d), jnp.asarray(c_d),
+        jnp.asarray(lw_d), w_max, jnp.asarray(idx),
+    )

@@ -1,4 +1,4 @@
-"""GUST SpMV execution (JAX).
+"""GUST SpMV execution (JAX): the pure-jnp oracle + legacy entry shims.
 
 The scheduled format turns SpMV into three dense streaming steps — exactly
 the paper's three hardware levels:
@@ -8,13 +8,19 @@ the paper's three hardware levels:
                   of its window                        (the crossbar)
   3. accumulate : adders integrate per window, dump at window end.
 
-Pure-jnp implementations live here (also serving as the kernel oracle);
-``repro.kernels.ops`` provides the Pallas path that fuses 1-3 on TPU.
+:func:`spmv_scheduled` is the raw-schedule oracle the kernel tests
+compare against.  Every other entry point here (``spmv``,
+``spmm_scheduled``, ``spmm_ragged``, ``distributed_spmv``) is a legacy
+shim that constructs a :class:`~repro.core.plan.GustPlan` and delegates —
+new code should call ``repro.plan(matrix, config).spmv(v)`` / ``.spmm(x)``
+/ ``.shard(mesh)`` directly.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
+from collections import OrderedDict
 from typing import Optional
 
 import jax
@@ -68,7 +74,8 @@ def _spmv_scheduled_impl(
 
 
 def spmv_scheduled(sched: GustSchedule, v: jnp.ndarray) -> jnp.ndarray:
-    """SpMV from the scheduled format (pure jnp; oracle for the kernel)."""
+    """SpMV from the *raw* (unpacked) scheduled format — the pure-jnp
+    oracle the kernel and plan paths are validated against."""
     m, n = sched.shape
     if v.shape != (n,):
         raise ValueError(f"vector shape {v.shape} != ({n},)")
@@ -85,53 +92,46 @@ def spmv_scheduled(sched: GustSchedule, v: jnp.ndarray) -> jnp.ndarray:
     )
 
 
+#: Identity-keyed LRU of shim plans: repeated ``spmm_scheduled`` calls on
+#: the same schedule object reuse one plan (and its pack) without paying
+#: the ScheduleCache's O(nnz) content hash per call.  Entries hold the
+#: schedule strongly (via plan.sched), so an id can never be recycled
+#: while its entry is alive; the identity re-check below makes a stale
+#: hit impossible even after eviction.
+_SHIM_PLANS: "OrderedDict[int, object]" = OrderedDict()
+_SHIM_PLANS_MAX = 64
+
+
 def spmm_scheduled(sched: GustSchedule, x: jnp.ndarray) -> jnp.ndarray:
-    """Multi-vector SpMV: ``x`` is (n, B) -> (m, B).  This is the decode-
-    batch path of :class:`~repro.core.gust_linear.GustLinear` (B independent
-    GUST passes sharing one schedule — paper §3.3: the schedule is reused
-    for any vector)."""
-    m, n = sched.shape
-    if x.ndim != 2 or x.shape[0] != n:
-        raise ValueError(f"expected (n={n}, B), got {x.shape}")
-    return jax.vmap(lambda col: spmv_scheduled(sched, col), in_axes=1, out_axes=1)(x)
+    """Legacy shim: multi-vector SpMV, ``x`` (n, B) -> (m, B).
 
+    Routes through a padded-layout :class:`~repro.core.plan.GustPlan`
+    (paper §3.3: the schedule is reused for any vector); prefer
+    ``repro.plan(sched, backend=...).spmm(x)``."""
+    from .plan import PlanConfig, plan
 
-@functools.partial(jax.jit, static_argnames=("m", "l", "num_windows", "c_blk"))
-def _spmm_ragged_impl(
-    m_blk, row_blk, col_blk, block_window, row_perm, x, *, m, l, num_windows,
-    c_blk,
-):
-    # Level 1: multiply the ragged stream (only real blocks) against the
-    # gathered vector.  Padding slots carry value 0 / in-bounds lane cols.
-    v_sch = jnp.take(x, col_blk.astype(jnp.int32), axis=0, mode="clip")
-    partial = m_blk.astype(jnp.float32)[:, :, None] * v_sch.astype(jnp.float32)
-    # Levels 2+3: the window of stream row r is block_window[r // c_blk];
-    # global adder id = window*l + row, one segment-sum integrates+dumps
-    # every window.
-    window = jnp.repeat(block_window.astype(jnp.int32), c_blk)
-    adder = window[:, None] * l + row_blk.astype(jnp.int32)
-    b = x.shape[1]
-    y_sorted = jax.ops.segment_sum(
-        partial.reshape(-1, b), adder.reshape(-1),
-        num_segments=num_windows * l,
-    )
-    out = jnp.zeros((max(m, num_windows * l), b), jnp.float32)
-    return out.at[row_perm].set(y_sorted)[:m]
+    p = _SHIM_PLANS.get(id(sched))
+    if p is None or p.sched is not sched:
+        p = plan(
+            sched, PlanConfig(l=sched.l, layout="padded", backend="jnp"),
+            cache=None,
+        )
+        _SHIM_PLANS[id(sched)] = p
+        while len(_SHIM_PLANS) > _SHIM_PLANS_MAX:
+            _SHIM_PLANS.popitem(last=False)
+    else:
+        _SHIM_PLANS.move_to_end(id(sched))
+    return p.spmm(x)
 
 
 def spmm_ragged(ragged: RaggedSchedule, x: jnp.ndarray) -> jnp.ndarray:
-    """Multi-vector SpMV from the ragged block stream (pure jnp segment-
-    sum; oracle for the scalar-prefetch kernel): ``x`` (n, B) -> (m, B).
-    Streams ``T_blk * c_blk`` rows instead of the padded ``W * C_pad`` —
-    on skewed matrices most of the padded stream is dead cycles."""
-    m, n = ragged.shape
-    if x.ndim != 2 or x.shape[0] != n:
-        raise ValueError(f"expected (n={n}, B), got {x.shape}")
-    return _spmm_ragged_impl(
-        ragged.m_blk, ragged.row_blk, ragged.col_blk, ragged.block_window,
-        ragged.row_perm, x, m=m, l=ragged.l, num_windows=ragged.num_windows,
-        c_blk=ragged.c_blk,
-    ).astype(x.dtype)
+    """Legacy shim: multi-vector SpMV from the ragged block stream,
+    ``x`` (n, B) -> (m, B).  Streams ``T_blk * c_blk`` rows instead of the
+    padded ``W * C_pad`` — on skewed matrices most of the padded stream is
+    dead cycles.  Routes through :class:`~repro.core.plan.GustPlan`."""
+    from .plan import GustPlan
+
+    return GustPlan.from_artifact(ragged, backend="jnp").spmm(x)
 
 
 def spmv(
@@ -142,22 +142,27 @@ def spmv(
     load_balance: bool = True,
     method: str = "fast",
 ) -> jnp.ndarray:
-    """Convenience: schedule + execute in one call.  The schedule is served
-    from the process-global content-keyed
-    :class:`~repro.core.packing.ScheduleCache`, so repeated calls on the
-    same matrix pay for scheduling once — and the schedule stays resident
-    (LRU-bounded) after this call returns; use
-    :func:`repro.core.packing.clear_cache` to release it."""
-    from .packing import default_cache
+    """Deprecated convenience shim: schedule + execute in one call.
 
-    return spmv_scheduled(
-        default_cache.schedule(coo, l, load_balance=load_balance, method=method), v
+    Use ``repro.plan(coo, PlanConfig(l=..., colorer=...)).spmv(v)`` — the
+    plan makes the schedule-once/execute-many contract explicit (and keeps
+    the schedule resident in the content-keyed cache exactly as before;
+    :func:`repro.core.packing.clear_cache` releases it)."""
+    warnings.warn(
+        "spmv(coo, v, l=..., method=...) is deprecated; use "
+        "repro.plan(coo, PlanConfig(l=..., colorer=..., "
+        "load_balance=...)).spmv(v) ('method' is spelled 'colorer', 'l' "
+        "stays 'l')",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    from .plan import PlanConfig, plan
 
-
-# ---------------------------------------------------------------------------
-# Distributed SpMV — the paper's §5.5 "k parallel length-l GUSTs".
-# ---------------------------------------------------------------------------
+    return plan(
+        coo,
+        PlanConfig(l=l, colorer=method, load_balance=load_balance,
+                   backend="jnp"),
+    ).spmv(v)
 
 
 def distributed_spmv(
@@ -169,136 +174,26 @@ def distributed_spmv(
     c_blk: int = 1,
     cache="default",
 ):
-    """Shard row-windows across ``axis`` (each device runs an independent
-    length-l GUST over its windows; the schedule is untouched — paper:
-    "the Edge-Coloring schedule would not need to change").  The vector is
-    replicated; outputs concatenate without collectives because windows own
-    disjoint output rows.
+    """Legacy shim for the paper's §5.5 "k parallel length-l GUSTs": shard
+    row-windows across ``axis`` (contiguous window ranges balanced by
+    ragged-stream block count; the schedule is untouched — paper: "the
+    Edge-Coloring schedule would not need to change").  The vector is
+    replicated; outputs concatenate without collectives because windows
+    own disjoint output rows.
 
-    Devices get contiguous window ranges balanced by **block count** of
-    the ragged stream (``max(ceil(C_w / c_blk), 1)`` blocks per window),
-    not by window count: on skewed (power-law) matrices equal-window
-    splits leave most devices idle while one drains the heavy windows,
-    and the old padded layout additionally streamed every light window at
-    the global ``C_pad``.  Each device executes only its own blocks,
-    padded to the max per-device block count (the residual imbalance of a
-    contiguous split).
+    Routes through ``repro.plan(sched, ...).shard(mesh, axis).spmv(v)`` —
+    the plan owns the device-major layout memoization (``cache="default"``
+    uses the process-global :class:`~repro.core.packing.ScheduleCache`,
+    ``None`` re-packs every call)."""
+    from .packing import default_cache
+    from .plan import PlanConfig, plan
 
-    The ragged pack is served from the content-keyed
-    :class:`~repro.core.packing.ScheduleCache` (``cache="default"`` uses
-    the process-global one, ``None`` re-packs every call), so repeated
-    calls on the same schedule pack exactly once."""
-    from .packing import default_cache, pack_ragged
-
-    n_dev = mesh.shape[axis]
-    m, n = sched.shape
-    l, W = sched.l, sched.num_windows
     if cache == "default":
         cache = default_cache
-    if cache is None:
-        layout = _shard_layout(pack_ragged(sched, c_blk), n_dev)
-    else:
-        # the whole device-major layout (host assembly + device upload) is
-        # a pure function of (schedule content, c_blk, n_dev) — memoize it
-        # next to the ragged pack so repeated calls only run the shard_map
-        layout = cache.memo(
-            ("shard_layout", cache.schedule_key(sched), c_blk, n_dev),
-            lambda: _shard_layout(
-                cache.ragged_for(sched, c_blk=c_blk), n_dev
-            ),
-        )
-    m_d, r_d, c_d, lw_d, w_max, idx = layout
-    fn = _shard_spmv_fn(mesh, axis, l, c_blk, w_max)
-    y_dev = fn(m_d, r_d, c_d, lw_d, v)
-    # Reassemble: device d's first w_cnt[d]*l rows are windows
-    # w_bound[d]..w_bound[d+1] in order (collectives-free concatenation).
-    y_sorted = y_dev.reshape(-1)[idx][:m]
-    return jnp.zeros((m,), jnp.float32).at[jnp.asarray(sched.row_perm)].set(y_sorted)
-
-
-@functools.lru_cache(maxsize=64)
-def _shard_spmv_fn(mesh, axis: str, l: int, c_blk: int, w_max: int):
-    """Jitted shard_map program for one (mesh, geometry) — memoized so
-    repeated ``distributed_spmv`` calls reuse jax's trace/compile cache
-    instead of paying a fresh closure trace every call."""
-    from jax.sharding import PartitionSpec as P
-
-    from repro.distributed.collectives import shard_map
-
-    def local(m_blk, r_blk, c_blk_, lw, vec):
-        # (1, B_max*cb, l) stream + (1, B_max) local window ids ->
-        # per-window segment sum -> (1, W_max * l)
-        p = m_blk[0].astype(jnp.float32) * jnp.take(
-            vec, c_blk_[0], axis=0, mode="clip"
-        )
-        window = jnp.repeat(lw[0], c_blk)
-        adder = window[:, None] * l + r_blk[0]
-        return jax.ops.segment_sum(
-            p.reshape(-1), adder.reshape(-1), num_segments=w_max * l
-        )[None]
-
-    spec_in = P(axis)  # shard the leading device dim
-    return jax.jit(
-        shard_map(
-            local,
-            mesh=mesh,
-            in_specs=(spec_in, spec_in, spec_in, spec_in, P()),
-            out_specs=spec_in,
-        )
+    p = plan(
+        sched,
+        PlanConfig(l=sched.l, layout="ragged", backend="jnp", c_blk=c_blk,
+                   mesh_axis=axis),
+        cache=cache,
     )
-
-
-def _shard_layout(ragged, n_dev: int):
-    """Device-major execution layout of a ragged stream for ``n_dev``
-    devices: contiguous window ranges balanced by block count, each
-    device's blocks padded to the common max.
-
-    Returns ``(m_d, r_d, c_d, lw_d, w_max, idx)`` — the four ``(n_dev,
-    ...)`` device arrays for the shard_map, the padded per-device window
-    count, and the gather index reassembling the per-device outputs into
-    scheduled row order.  Everything here is a pure function of (ragged
-    stream, n_dev); ``distributed_spmv`` memoizes it in the
-    ``ScheduleCache`` so repeated calls skip both the host assembly and
-    the host->device upload."""
-    l, W, cb, t_blk = ragged.l, ragged.num_windows, ragged.c_blk, ragged.num_blocks
-    block_starts = np.asarray(ragged.block_starts, np.int64)
-    block_window = np.asarray(ragged.block_window, np.int64)
-
-    # Contiguous window boundaries hitting equal block-count targets:
-    # device d owns windows [w_bound[d], w_bound[d+1]).
-    targets = (np.arange(1, n_dev) * t_blk) // n_dev
-    w_bound = np.concatenate(
-        [[0], np.searchsorted(block_starts, targets, side="left"), [W]]
-    )
-    w_bound = np.maximum.accumulate(np.minimum(w_bound, W))
-    w_cnt = np.diff(w_bound)
-    b_cnt = block_starts[w_bound[1:]] - block_starts[w_bound[:-1]]
-    b_max = max(int(b_cnt.max()) if n_dev else 1, 1)
-    w_max = max(int(w_cnt.max()) if n_dev else 1, 1)
-
-    # Device-major padded streams; padding blocks keep the packed-format
-    # invariants (values 0, columns gather the slot's lane, rows 0) and
-    # route to local window 0 — value 0 contributes nothing.
-    lane = np.arange(l, dtype=np.int32)
-    m_d = np.zeros((n_dev, b_max * cb, l), np.float32)
-    r_d = np.zeros((n_dev, b_max * cb, l), np.int32)
-    c_d = np.broadcast_to(lane, (n_dev, b_max * cb, l)).copy()
-    lw_d = np.zeros((n_dev, b_max), np.int32)
-    m_src = np.asarray(ragged.m_blk, np.float32)
-    r_src = np.asarray(ragged.row_blk, np.int32)
-    c_src = np.asarray(ragged.col_blk, np.int32)
-    for d in range(n_dev):
-        g0, g1 = int(block_starts[w_bound[d]]), int(block_starts[w_bound[d + 1]])
-        rows = (g1 - g0) * cb
-        m_d[d, :rows] = m_src[g0 * cb: g1 * cb]
-        r_d[d, :rows] = r_src[g0 * cb: g1 * cb]
-        c_d[d, :rows] = c_src[g0 * cb: g1 * cb]
-        lw_d[d, : g1 - g0] = block_window[g0:g1] - w_bound[d]
-
-    idx = np.concatenate(
-        [d * w_max * l + np.arange(w_cnt[d] * l) for d in range(n_dev)]
-    ) if W else np.zeros(0, np.int64)
-    return (
-        jnp.asarray(m_d), jnp.asarray(r_d), jnp.asarray(c_d),
-        jnp.asarray(lw_d), w_max, jnp.asarray(idx),
-    )
+    return p.shard(mesh, axis).spmv(v)

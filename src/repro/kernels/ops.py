@@ -1,28 +1,24 @@
-"""jit'd public wrappers around the GUST Pallas kernels.
+"""Execution layer of the GUST scheduled format + legacy entry shims.
 
-The packed scheduled format itself lives in :mod:`repro.core.packing` —
-the single home of the ragged→packed conversion (vectorized packing,
-repadding, the leaves/meta codec, and the content-keyed schedule cache).
-``PackedSchedule`` / ``pack_schedule`` / ``packed_spec`` are re-exported
-here for compatibility; this module only owns the *execution* entry
-point.
-
-``gust_spmm`` executes ``y = M @ x`` for ``x: (n, B)`` from **either**
+The packed scheduled format itself lives in :mod:`repro.core.packing`;
+the plan/execute API lives in :mod:`repro.core.plan` (one decision point
+for layout/backend/shard choice).  This module owns only the jitted
+executor, :func:`execute_spmm`, which runs ``y = M @ x`` from **either**
 fixed-shape layout — a padded :class:`PackedSchedule` (dense
 ``(W, C_pad/c_blk)`` grid) or a ragged :class:`RaggedSchedule` block
 stream (1-D scalar-prefetch grid over real blocks only) — through the
 Pallas kernels (``use_kernel=True``) or the pure-XLA segment-sum path
-(identical math; the dry-run/serving default on non-TPU backends and the
-kernel oracle).  The layout choice is made at pack time:
-:func:`repro.core.packing.pack_auto` picks ragged when the measured
-padding waste ``(W * C_pad) / (T_blk * c_blk)`` crosses its threshold,
-and :func:`gust_spmm_auto` wires schedule → auto-pack → execute through
-the content-keyed cache.
+(identical math; the kernel oracle and the default off TPU).
+
+``gust_spmm`` / ``gust_spmm_auto`` remain as thin compatibility shims
+that construct a :class:`~repro.core.plan.GustPlan` and delegate — new
+code should call ``repro.plan(...).spmm(x)`` directly.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Tuple, Union
 
 import jax
@@ -33,7 +29,6 @@ from repro.core.packing import (
     PackedSchedule,
     RaggedSchedule,
     default_cache,
-    pack_auto,
     pack_schedule,
     packed_spec,
 )
@@ -46,6 +41,7 @@ __all__ = [
     "PackedSchedule",
     "RaggedSchedule",
     "pack_schedule",
+    "execute_spmm",
     "gust_spmm",
     "gust_spmm_auto",
     "packed_spec",
@@ -62,22 +58,35 @@ def _prep_x(x: jnp.ndarray, n: int, l: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return x2d, x2d[:, ::-1, :]
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret", "c_blk"))
-def gust_spmm(
+@functools.partial(
+    jax.jit, static_argnames=("use_kernel", "interpret", "c_blk", "transpose_io")
+)
+def execute_spmm(
     packed: Union[PackedSchedule, RaggedSchedule],
     x: jnp.ndarray,
     *,
     use_kernel: bool = True,
     interpret: bool = True,
     c_blk: int = 8,
+    transpose_io: bool = False,
 ) -> jnp.ndarray:
     """``y = M @ x`` from either fixed-shape scheduled layout;
     x (n, B) -> y (m, B).
 
     ``c_blk`` only applies to the padded layout (a ragged stream's block
-    height is baked in at pack time)."""
+    height is baked in at pack time).  ``transpose_io=True`` takes and
+    returns batch-major arrays instead — x (B, n) -> y (B, m) — with both
+    transposes inside this jit (XLA fuses them into the gather/scatter),
+    so batch-major callers never materialize a transposed copy."""
     m, n = packed.shape
-    if x.ndim != 2 or x.shape[0] != n:
+    if transpose_io:
+        if x.ndim != 2 or x.shape[1] != n:
+            raise ValueError(
+                f"expected batch-major x of shape (B, {n}) with "
+                f"transpose_io=True, got {x.shape}"
+            )
+        x = x.T
+    elif x.ndim != 2 or x.shape[0] != n:
         raise ValueError(f"expected x of shape ({n}, B), got {x.shape}")
     l, W = packed.l, packed.num_windows
     b = x.shape[1]
@@ -126,7 +135,30 @@ def gust_spmm(
     y_sorted = y_win.reshape(W * l, b)
     out = jnp.zeros((max(m, W * l), b), jnp.float32)
     out = out.at[packed.row_perm].set(y_sorted)
-    return out[:m].astype(x.dtype)
+    y = out[:m].astype(x.dtype)
+    return y.T if transpose_io else y
+
+
+def gust_spmm(
+    packed: Union[PackedSchedule, RaggedSchedule],
+    x: jnp.ndarray,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = True,
+    c_blk: int = 8,
+) -> jnp.ndarray:
+    """Legacy packed-entry shim: ``y = M @ x``, x (n, B) -> y (m, B).
+
+    Routes through :class:`~repro.core.plan.GustPlan` (the single
+    execution path); prefer ``repro.plan(matrix, ...).spmm(x)``."""
+    from repro.core.plan import GustPlan
+
+    return GustPlan.from_artifact(
+        packed,
+        backend="pallas" if use_kernel else "jnp",
+        interpret=interpret,
+        c_blk=c_blk,
+    ).spmm(x)
 
 
 def gust_spmm_auto(
@@ -139,21 +171,30 @@ def gust_spmm_auto(
     waste_threshold: float = None,
     cache=default_cache,
 ) -> jnp.ndarray:
-    """Schedule-level entry: auto-select ragged vs padded execution by the
-    measured waste ratio ``(W * C_pad) / (T_blk * c_blk)``, pack through
-    the content-keyed cache (pass ``cache=None`` to bypass), execute.
+    """Deprecated schedule-level shim: auto-select ragged vs padded by the
+    measured waste ratio, pack through the content-keyed cache, execute.
 
-    Skewed matrices (max window colors >> mean) take the ragged streaming
-    path; near-uniform ones keep the simpler padded grid.  The layout
-    decision lives in one place — :func:`repro.core.packing.pack_auto` /
-    :meth:`ScheduleCache.auto_for` (``waste_threshold=None`` means
-    ``DEFAULT_WASTE_THRESHOLD``)."""
-    if cache is None:
-        packed = pack_auto(sched, c_blk, waste_threshold=waste_threshold)
-    else:
-        packed = cache.auto_for(
-            sched, c_blk=c_blk, waste_threshold=waste_threshold
-        )
-    return gust_spmm(
-        packed, x, use_kernel=use_kernel, interpret=interpret, c_blk=c_blk
+    Use ``repro.plan(schedule, PlanConfig(layout="auto", ...)).spmm(x)``
+    instead — the plan owns the one layout/backend decision point."""
+    warnings.warn(
+        "gust_spmm_auto(sched, x, use_kernel=...) is deprecated; use "
+        "repro.plan(sched, PlanConfig(layout='auto', backend='pallas'|'jnp'"
+        ", c_blk=...)).spmm(x)",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    from repro.core.plan import PlanConfig, plan
+
+    p = plan(
+        sched,
+        PlanConfig(
+            l=sched.l,
+            layout="auto",
+            backend="pallas" if use_kernel else "jnp",
+            interpret=interpret,
+            c_blk=c_blk,
+            waste_threshold=waste_threshold,
+        ),
+        cache=cache,
+    )
+    return p.spmm(x)

@@ -177,7 +177,10 @@ def build_cell(arch_id: str, shape_name: str, mesh):
 def build_gust_decode_cell(arch_id: str, mesh, density: float = 0.1,
                            gust_length: int = 256):
     """Beyond-assignment cell: the GUST-sparse decode path, schedule stream
-    sized from the paper's Eq. 9 bound (serving/gust_serve.dryrun_specs)."""
+    sized from the paper's Eq. 9 bound (``GustPlan.spec_for`` via
+    serving/gust_serve.dryrun_specs).  REPRO_GUST_COMPACT/REPRO_GUST_RAGGED
+    select the plan's dtype policy and layout (GustServeConfig.plan_config
+    is the one spelling of those knobs)."""
     from repro.serving.gust_serve import GustServeConfig, decode_step_gust, dryrun_specs
 
     cfg = get_arch(arch_id)
@@ -188,6 +191,7 @@ def build_gust_decode_cell(arch_id: str, mesh, density: float = 0.1,
     ragged = os.environ.get("REPRO_GUST_RAGGED", "0") == "1"
     gcfg = GustServeConfig(density=density, gust_length=gust_length,
                            use_kernel=False, compact=compact, ragged=ragged)
+    pc = gcfg.plan_config
     gust_specs = dryrun_specs(lm, gcfg)
     params_specs = _bf16_params(jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0))))
     pspecs = param_specs(params_specs, mesh, mode="serve")
@@ -220,6 +224,7 @@ def build_gust_decode_cell(arch_id: str, mesh, density: float = 0.1,
         _batch_sharding(mesh, {"tokens": tok_spec})["tokens"],
         NamedSharding(mesh, P()),
     ), {"n_params": _count_params(params_specs), "gust_density": density,
+        "gust_layout": pc.layout, "gust_dtypes": (pc.value_dtype, pc.index_dtype),
         "tokens_per_step": shape.global_batch}
 
 

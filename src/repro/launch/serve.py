@@ -1,9 +1,15 @@
 """Serving driver: batched requests against a (reduced or full) model,
 dense or GUST-sparse decode.
 
+The GUST path plans every MLP matrix once at engine build
+(``serving.gust_serve.gustify`` -> ``repro.plan``) and executes each
+decode step through the stacked :class:`~repro.core.plan.GustPlan`
+leaves; ``--ragged``/``--compact``/``--use-kernel`` map onto the plan's
+layout/dtype/backend knobs.
+
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch yi_6b --reduced \
-        --requests 6 --max-new 16 [--gust --density 0.2]
+        --requests 6 --max-new 16 [--gust --density 0.2 --ragged --compact]
 """
 
 from __future__ import annotations
@@ -36,6 +42,7 @@ def run_serving(
     gust_length: int = 32,
     use_kernel: bool = False,
     ragged: bool = False,
+    compact: bool = False,
     seed: int = 0,
 ):
     cfg = get_arch(arch)
@@ -47,7 +54,7 @@ def run_serving(
     if gust:
         gcfg = GustServeConfig(
             density=density, gust_length=gust_length, use_kernel=use_kernel,
-            ragged=ragged,
+            ragged=ragged, compact=compact,
         )
     sc = ServeConfig(batch=batch, seq_len=seq_len, dtype="float32", gust=gcfg)
     loop = ServeLoop(lm, params, sc, seed=seed)
@@ -95,13 +102,16 @@ def main():
     ap.add_argument("--ragged", action="store_true",
                     help="stack ragged color-block streams (only real "
                     "cycle blocks) instead of the padded C_pad layout")
+    ap.add_argument("--compact", action="store_true",
+                    help="bf16 values + int16 indices: halves the streamed "
+                    "schedule bytes (the paper's packed-word analogue)")
     args = ap.parse_args()
     _, stats = run_serving(
         args.arch, batch=args.batch, seq_len=args.seq_len,
         requests=args.requests, prompt_len=args.prompt_len,
         max_new=args.max_new, gust=args.gust, density=args.density,
         gust_length=args.gust_length, use_kernel=args.use_kernel,
-        ragged=args.ragged,
+        ragged=args.ragged, compact=args.compact,
     )
     print(json.dumps(stats))
 

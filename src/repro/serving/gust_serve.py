@@ -1,31 +1,29 @@
 """GUST-sparse serving: the paper's technique as a first-class feature.
 
 Decode-time LM inference is matvec-dominated.  ``gustify`` converts a
-trained model's MLP weights into the GUST scheduled format (magnitude
-pruning -> edge-coloring schedule -> packed blocks), **once**, at
-weight-load time — the paper's §3.3/§5.3 amortization ("the scheduling
-for each matrix only needs to be computed once ... even if the vector
-changes").  ``decode_step_gust`` then mirrors the model's decode step but
-routes each layer's MLP matvecs through the GUST SpMV path.
+trained model's MLP weights into GUST plans (magnitude pruning ->
+``repro.plan`` -> packed blocks), **once**, at weight-load time — the
+paper's §3.3/§5.3 amortization ("the scheduling for each matrix only
+needs to be computed once ... even if the vector changes").
+``decode_step_gust`` then mirrors the model's decode step but routes each
+layer's MLP matvecs through :meth:`GustPlan.spmm`.
 
-Layer stacking: packed schedules are padded to a *uniform* color count
-C_pad across layers (``PackedSchedule.repad_to``) so the leaves stack
-along the reps axis and the layer scan stays a single compact HLO — the
-GUST schedule is literally part of the serving checkpoint.  With
-``GustServeConfig.ragged`` the stack holds ragged color-block streams
-instead: layers are equalized to the longest layer's *block count*
-(``RaggedSchedule.repad_to_blocks``) rather than the heaviest window's
-C_pad, so skewed pruned matrices stop streaming dead padding cycles
-through every decode step.  The ragged→packed conversion, the leaves/meta
-codec shared with ``dryrun_specs``, and the content-keyed schedule cache
-all live in ``repro.core.packing`` (see its module docstring for the
-format lifecycle and invariants).
+Layer stacking is :meth:`GustPlan.stack`: per-layer packed artifacts are
+equalized to a uniform stream length (padded layout: uniform C_pad via
+``repad_to``; ragged layout: uniform block count via ``repad_to_blocks``)
+so the leaves stack along the reps axis and the layer scan stays a single
+compact HLO — the GUST plan is literally part of the serving checkpoint.
+With ``GustServeConfig.ragged`` the stack holds ragged color-block
+streams, so skewed pruned matrices stop streaming dead padding cycles
+through every decode step.  The wire format is the plan's
+``to_spec``/``from_spec`` leaves/meta codec, shared with ``dryrun_specs``.
 
 Applies to pattern-length-1 dense archs (phi3/yi/mistral-large/llava/
 gemma3 would need per-position stacks — gemma3 and the MoE archs run the
 per-expert variant documented in DESIGN.md §5).  ``dryrun_specs`` sizes
-the schedule stream from the paper's Eq. 9 bound so the 512-chip dry-run
-lowers the GUST decode path without running the scheduler.
+the schedule stream from the paper's Eq. 9 bound
+(:meth:`GustPlan.spec_for`) so the 512-chip dry-run lowers the GUST
+decode path without running the scheduler.
 """
 
 from __future__ import annotations
@@ -41,20 +39,8 @@ from repro.configs.base import ArchConfig
 from repro.core.bounds import expected_colors_bound
 from repro.core.formats import COOMatrix
 from repro.core.gust_linear import prune_by_magnitude
-from repro.core.packing import (
-    default_cache,
-    packed_from_leaves,
-    packed_leaves,
-    packed_meta,
-    packed_spec,
-    ragged_from_leaves,
-    ragged_leaves,
-    ragged_meta,
-    ragged_spec,
-    schedule_packed,
-    stacked_leaf_specs,
-)
-from repro.kernels.ops import gust_spmm
+from repro.core.packing import default_cache, stacked_leaf_specs
+from repro.core.plan import GustPlan, PlanConfig, plan
 from repro.models import transformer as T
 from repro.models.layers import apply_norm
 from repro.models.model_zoo import LM
@@ -87,6 +73,22 @@ class GustServeConfig:
     def index_dtype(self):
         return jnp.int16 if self.compact else jnp.int32
 
+    @property
+    def plan_config(self) -> PlanConfig:
+        """These knobs in the one canonical spelling — every serving path
+        (gustify, decode, dry-run specs) plans through this config."""
+        return PlanConfig(
+            l=self.gust_length,
+            colorer=self.method,
+            load_balance=self.load_balance,
+            c_blk=8,
+            layout="ragged" if self.ragged else "padded",
+            backend="pallas" if self.use_kernel else "jnp",
+            interpret=True,
+            value_dtype=jnp.dtype(self.value_dtype).name,
+            index_dtype=jnp.dtype(self.index_dtype).name,
+        )
+
 
 def _prune_to_coo(w: np.ndarray, cfg: GustServeConfig) -> COOMatrix:
     """w: (d_in, d_out) layer weight; GUST computes y = M x with
@@ -98,10 +100,11 @@ def _prune_to_coo(w: np.ndarray, cfg: GustServeConfig) -> COOMatrix:
 
 
 def gustify(lm: LM, params, cfg: GustServeConfig) -> Dict:
-    """Build stacked packed schedules for every rep-layer MLP matrix.
+    """Build stacked GUST plans for every rep-layer MLP matrix.
 
-    Returns ``{"mats": {name: {"leaves": {...(R, ...)}, "meta": PackedSchedule
-    prototype}}, "stats": {...}}``.
+    Returns ``{"mats": {name: {"leaves": {...(R, ...)}, "meta": static
+    layout tuple}}, "stats": {...}}`` — per matrix, the
+    :meth:`GustPlan.stack` of one plan per layer.
     """
     if len(lm.stack.pattern) != 1 or lm.stack.pattern[0].kind != "attn_mlp":
         raise ValueError(
@@ -110,50 +113,31 @@ def gustify(lm: LM, params, cfg: GustServeConfig) -> Dict:
         )
     mlp_params = params["stack"]["reps"][0]["mlp"]
     reps = lm.stack.reps
+    pc = cfg.plan_config
     out: Dict = {"mats": {}, "stats": {}}
     for name in cfg.mats:
         w_stack = np.asarray(mlp_params[name])  # (R, d_in, d_out)
-        packs = []
-        cycles = []
-        for r in range(reps):
-            # schedule + pack through the content-keyed cache: re-gustifying
-            # the same weights (e.g. a compact re-export) reuses the schedule
-            coo = _prune_to_coo(w_stack[r], cfg)
-            if cfg.ragged:
-                sched, packed = default_cache.ragged_packed(
-                    coo, cfg.gust_length, load_balance=cfg.load_balance,
-                    method=cfg.method, c_blk=8,
-                    value_dtype=cfg.value_dtype, index_dtype=cfg.index_dtype,
-                )
-            else:
-                sched, packed = schedule_packed(
-                    coo, cfg.gust_length, load_balance=cfg.load_balance,
-                    method=cfg.method, c_blk=8,
-                    value_dtype=cfg.value_dtype, index_dtype=cfg.index_dtype,
-                )
-            cycles.append(sched.cycles)
-            packs.append(packed)
+        # one plan per layer, through the content-keyed cache: re-gustifying
+        # the same weights (e.g. a compact re-export) reuses the schedule
+        plans = [
+            plan(_prune_to_coo(w_stack[r], cfg), pc, cache=default_cache)
+            for r in range(reps)
+        ]
+        stacked = GustPlan.stack(plans)
+        out["mats"][name] = stacked
+        # uniform stream size after stacking = max over layers (stack()
+        # equalizes to it); read off the artifacts, not meta positions
         if cfg.ragged:
-            # equalize stream length so leaves stack: grow every layer to
-            # the longest layer's block count with all-padding blocks
-            t_uniform = max(p.num_blocks for p in packs)
-            packs = [p.repad_to_blocks(t_uniform) for p in packs]
-            leaf_fn, meta = ragged_leaves, ragged_meta(packs[0])
-            size_stat = {"num_blocks": t_uniform}
+            size_stat = {
+                "num_blocks": max(p.artifact.num_blocks for p in plans)
+            }
         else:
-            # re-pad every layer to the uniform c_pad so leaves stack
-            c_uniform = max(p.c_pad for p in packs)
-            packs = [p.repad_to(c_uniform) for p in packs]
-            leaf_fn, meta = packed_leaves, packed_meta(packs[0])
-            size_stat = {"c_pad": c_uniform}
-        leaves = jax.tree.map(
-            lambda *xs: jnp.stack(xs), *[leaf_fn(p) for p in packs]
-        )
-        out["mats"][name] = {"leaves": leaves, "meta": meta}
+            size_stat = {"c_pad": max(p.artifact.c_pad for p in plans)}
+        leaves = stacked["leaves"]
         nnz = int(np.count_nonzero(np.asarray(leaves["m_blk"])))
         slots = leaves["m_blk"].size
         out["stats"][name] = {
-            "cycles_per_layer": cycles,
+            "cycles_per_layer": [p.sched.cycles for p in plans],
             "stream_utilization": nnz / max(slots, 1),
             "streamed_slots": int(slots),
             **size_stat,
@@ -166,13 +150,15 @@ def _gust_mlp(gust_slice, metas, x, mlp_kind: str, cfg: GustServeConfig):
     b = x.shape[0]
     xt = x[:, 0].T.astype(jnp.float32)  # (d, B)
     act = jax.nn.silu if mlp_kind == "swiglu" else jax.nn.gelu
+    pc = cfg.plan_config
 
     def mv(name, v):
-        meta = metas[name]
-        rebuild = ragged_from_leaves if meta[0] == "ragged" else packed_from_leaves
-        return gust_spmm(
-            rebuild(gust_slice[name], meta), v, use_kernel=cfg.use_kernel
+        # one layer's slice of the stacked plan, rebuilt through the
+        # leaves/meta codec — the same GustPlan route every entry point takes
+        p = GustPlan.from_spec(
+            {"leaves": gust_slice[name], "meta": metas[name]}, config=pc
         )
+        return p.spmm(v)
 
     g = act(mv("w_gate", xt).astype(jnp.float32))
     u = mv("w_up", xt).astype(jnp.float32)
@@ -215,32 +201,23 @@ def decode_step_gust(lm: LM, params, gust, caches, tokens, pos, *,
 def dryrun_specs(lm: LM, cfg: GustServeConfig) -> Dict:
     """ShapeDtypeStruct stand-in for the gust pytree, with the scheduled
     stream sized from Eq. 9: C = E[colors] bound at the pruned density —
-    the dry-run proof that the GUST decode path lowers and fits.  Honors
-    ``cfg.ragged``: a ragged config dry-runs the ragged program (the
-    Eq. 9 bound sizes every window's block count, so the spec'd stream is
-    ``W * ceil(C/c_blk)`` blocks)."""
+    the dry-run proof that the GUST decode path lowers and fits.  Each
+    matrix is a :meth:`GustPlan.spec_for` plan (honoring ``cfg.ragged``:
+    a ragged config dry-runs the ragged program, the bound sizing every
+    window's block count), stacked across reps by the shared codec."""
     reps = lm.stack.reps
     d = lm.cfg.d_model
     f = lm.cfg.d_ff
-    l = cfg.gust_length
+    pc = cfg.plan_config
     out: Dict = {"mats": {}, "stats": {}}
     for name in cfg.mats:
         m, n = (d, f) if name == "w_down" else (f, d)
-        c = expected_colors_bound(n, cfg.density, l)
-        if cfg.ragged:
-            bpw = max(-(-int(np.ceil(c)) // 8), 1)
-            num_blocks = max(-(-m // l), 1) * bpw
-            proto = ragged_spec(m, n, l, num_blocks, c_blk=8,
-                                value_dtype=cfg.value_dtype,
-                                index_dtype=cfg.index_dtype)
-            meta = ragged_meta(proto)
-        else:
-            c_pad = max(-(-int(np.ceil(c)) // 8) * 8, 8)
-            proto = packed_spec(m, n, l, c_pad, value_dtype=cfg.value_dtype,
-                                index_dtype=cfg.index_dtype)
-            meta = packed_meta(proto)
+        proto = GustPlan.spec_for(
+            m, n, pc, colors=expected_colors_bound(n, cfg.density, pc.l)
+        )
+        spec = proto.to_spec()
         out["mats"][name] = {
-            "leaves": stacked_leaf_specs(proto, reps),
-            "meta": meta,
+            "leaves": stacked_leaf_specs(proto.artifact, reps),
+            "meta": spec["meta"],
         }
     return out

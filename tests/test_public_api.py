@@ -1,0 +1,68 @@
+"""Public API surface of the top-level ``repro`` package.
+
+The exported symbol list is snapshotted below: adding a symbol is a
+deliberate one-line diff here; *losing* one (a refactor moving/renaming a
+public name) fails loudly instead of silently breaking downstream
+imports.  Also locks the laziness contract: ``import repro`` must not
+pull jax (entry points like ``repro.launch.dryrun`` pin ``XLA_FLAGS``
+before jax initializes).
+"""
+
+import subprocess
+import sys
+
+import pytest
+
+from conftest import SRC
+
+#: The public surface — update deliberately, with a matching note in
+#: ROADMAP.md (§Plan API + deprecation policy).
+EXPECTED_EXPORTS = sorted([
+    # plan/execute API
+    "plan", "GustPlan", "PlanConfig", "PlanCost",
+    # formats + scheduler
+    "COOMatrix", "GustSchedule", "coo_from_dense", "dense_from_coo",
+    "schedule",
+    # packed layouts + cache
+    "PackedSchedule", "RaggedSchedule", "ScheduleCache", "clear_cache",
+    # sparse LM serving
+    "GustLinear", "SparsityConfig", "prune_by_magnitude", "GustServeConfig",
+    # statistical bounds
+    "expected_colors_bound", "expected_execution_cycles",
+    "expected_utilization",
+    # legacy shims (deprecated spellings, still exported)
+    "spmv", "spmv_scheduled", "spmm_scheduled", "spmm_ragged",
+    "distributed_spmv", "gust_spmm", "gust_spmm_auto",
+])
+
+
+def test_exported_symbol_snapshot():
+    import repro
+
+    assert sorted(repro.__all__) == EXPECTED_EXPORTS
+    assert sorted(set(dir(repro)) & set(EXPECTED_EXPORTS)) == EXPECTED_EXPORTS
+
+
+def test_every_export_resolves():
+    import repro
+
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None, name
+    with pytest.raises(AttributeError):
+        repro.not_a_symbol
+
+
+def test_import_repro_is_lazy_no_jax():
+    code = (
+        "import sys; import repro; "
+        "assert 'jax' not in sys.modules, 'import repro pulled jax eagerly'; "
+        "assert 'repro.core' not in sys.modules; "
+        "print('lazy-ok')"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "lazy-ok" in proc.stdout
