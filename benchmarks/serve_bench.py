@@ -1,0 +1,153 @@
+"""Serving benchmark: continuous batching vs one-request-at-a-time.
+
+Drives the same engine (``ServeLoop`` over a reduced model) through a
+mixed-length request trace two ways:
+
+  * **serial baseline** — admit one request, drain it, admit the next
+    (the only correct pattern before per-slot prefill / per-slot
+    positions existed);
+  * **continuous** — enqueue the whole trace and let ``step()`` admit
+    into free slots while other requests are mid-decode.
+
+Both runs produce identical per-request tokens (greedy decode is
+slot-local and bit-identical — locked by tests/test_serving.py); what
+changes is utilization: the serial baseline decodes batch-1 work on a
+batch-B engine.  Records tokens/sec and mean slot occupancy to
+BENCH_serve.json and gates continuous >= ``--min-speedup`` x serial
+tokens/sec (ISSUE 4 acceptance: >=2x at batch >= 4).
+
+Usage:
+    PYTHONPATH=src python benchmarks/serve_bench.py [--tiny]
+        [--arch yi_6b] [--batch 4] [--requests 8] [--max-new 16]
+        [--min-speedup 2] [--out BENCH_serve.json]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.models.model_zoo import build_model
+from repro.serving import ServeConfig, ServeLoop
+
+
+def mixed_trace(n: int, vocab: int, lengths, seed: int = 0):
+    """Deterministic mixed-length prompt trace cycling through `lengths`."""
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(0, vocab, lengths[i % len(lengths)]).astype(np.int32)
+        for i in range(n)
+    ]
+
+
+def _warmup(loop: ServeLoop, lengths, vocab: int):
+    """Compile every (prompt-length prefill, decode, insert) program the
+    timed trace will hit, on this loop's jit caches."""
+    rng = np.random.default_rng(123)
+    for ln in sorted(set(lengths)):
+        rid = loop.submit(rng.integers(0, vocab, ln).astype(np.int32), max_new=1)
+        loop.run_to_completion()
+        del loop.completed[rid]
+    loop.stats = {"decode_steps": 0, "active_slot_steps": 0, "prefills": 0}
+
+
+def run_serial(loop: ServeLoop, prompts, max_new: int):
+    t0 = time.perf_counter()
+    done = {}
+    for pr in prompts:
+        rid = loop.submit(pr, max_new=max_new)
+        loop.run_to_completion()
+        done[rid] = loop.completed[rid]
+    return done, time.perf_counter() - t0
+
+
+def run_continuous(loop: ServeLoop, prompts, max_new: int):
+    t0 = time.perf_counter()
+    rids = [loop.enqueue(pr, max_new=max_new) for pr in prompts]
+    loop.run_to_completion()
+    return {r: loop.completed[r] for r in rids}, time.perf_counter() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi_6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--lengths", type=int, nargs="+", default=[4, 12, 6, 16],
+                    help="prompt lengths the trace cycles through (mixed!)")
+    ap.add_argument("--min-speedup", type=float, default=2.0,
+                    help="gate: continuous tok/s >= this x serial tok/s "
+                    "(0 = report only)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke preset: fewest requests/steps that still "
+                    "exercise mixed-length continuous batching")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_serve.json"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.tiny:
+        args.requests, args.max_new, args.lengths = 4, 3, [3, 7]
+        args.min_speedup = 0.0  # shared CI runners: report, don't gate
+
+    cfg = get_arch(args.arch).reduced()
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(args.seed))
+    sc = ServeConfig(batch=args.batch, seq_len=args.seq_len, dtype="float32",
+                     queue_capacity=max(args.requests, 64))
+    prompts = mixed_trace(args.requests, cfg.vocab, args.lengths, args.seed)
+
+    results = {}
+    for mode, runner in (("serial", run_serial), ("continuous", run_continuous)):
+        loop = ServeLoop(lm, params, sc, seed=args.seed)
+        _warmup(loop, args.lengths, cfg.vocab)
+        done, wall = runner(loop, prompts, args.max_new)
+        toks = sum(len(v) for v in done.values())
+        results[mode] = {
+            "wall_s": round(wall, 4),
+            "tokens": toks,
+            "tok_per_s": round(toks / wall, 2),
+            "decode_steps": loop.stats["decode_steps"],
+            "slot_occupancy": round(loop.occupancy, 4),
+            "outputs": {int(r): v for r, v in done.items()},
+        }
+
+    # continuous batching must not change any request's output
+    serial_outs = list(results["serial"]["outputs"].values())
+    cont_outs = list(results["continuous"]["outputs"].values())
+    assert serial_outs == cont_outs, "continuous batching changed outputs!"
+    for mode in results:
+        del results[mode]["outputs"]
+
+    speedup = results["continuous"]["tok_per_s"] / results["serial"]["tok_per_s"]
+    report = {
+        "arch": args.arch,
+        "batch": args.batch,
+        "requests": args.requests,
+        "max_new": args.max_new,
+        "prompt_lengths": args.lengths,
+        "serial": results["serial"],
+        "continuous": results["continuous"],
+        "tok_per_s_speedup": round(speedup, 2),
+        "min_speedup_gate": args.min_speedup,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    if args.min_speedup > 0:
+        assert args.batch >= 4, "speedup gate is defined at batch >= 4"
+        assert speedup >= args.min_speedup, (
+            f"continuous batching {speedup:.2f}x < gate {args.min_speedup}x"
+        )
+        print(f"PASS: continuous {speedup:.2f}x serial tokens/sec "
+              f"(gate {args.min_speedup}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,10 @@ def main():
     lm = build_model(cfg)
     params = lm.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32) for _ in range(4)]
+    # mixed-length prompts, served CONCURRENTLY: per-slot prefill and
+    # per-slot positions make each output identical to a solo run
+    prompts = [rng.integers(0, cfg.vocab, ln).astype(np.int32)
+               for ln in (8, 4, 12, 6)]
 
     for label, gust in (
         ("dense decode", None),
@@ -36,16 +39,16 @@ def main():
         loop = ServeLoop(lm, params, sc)
         build_s = time.time() - t0
         t0 = time.time()
-        outs = {}
-        for pr in prompts:
-            rid = loop.submit(pr, max_new=8)
-            loop.run_to_completion()
-            outs[rid] = loop.completed[rid]
+        rids = [loop.enqueue(pr, max_new=8) for pr in prompts]
+        loop.run_to_completion()
+        outs = {rid: loop.completed[rid] for rid in rids}
         gen_s = time.time() - t0
         toks = sum(len(v) for v in outs.values())
         print(f"{label}:")
         print(f"  engine build {build_s:.2f}s (includes scheduling for GUST), "
-              f"{toks} tokens in {gen_s:.2f}s")
+              f"{toks} tokens in {gen_s:.2f}s "
+              f"({loop.stats['decode_steps']} decode steps, "
+              f"slot occupancy {loop.occupancy:.0%})")
         if gust is not None and loop.gust_tree is not None:
             util = {k: f"{v['stream_utilization']:.2%}"
                     for k, v in loop.gust_tree["stats"].items()}

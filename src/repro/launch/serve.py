@@ -1,11 +1,19 @@
-"""Serving driver: batched requests against a (reduced or full) model,
-dense or GUST-sparse decode.
+"""Serving driver: a mixed-length request stream against a (reduced or
+full) model, dense or GUST-sparse decode, with continuous batching.
+
+Requests are enqueued up front (bounded admission queue) and the loop
+admits into free slots while other requests are mid-decode: per-slot
+prefill + per-slot positions make every request's output identical to a
+solo run, so batching is purely a throughput knob (reported as
+``tok_per_s`` / ``slot_occupancy``; ``--serial`` forces the old
+one-request-at-a-time pattern for comparison).
 
 The GUST path plans every MLP matrix once at engine build
 (``serving.gust_serve.gustify`` -> ``repro.plan``) and executes each
 decode step through the stacked :class:`~repro.core.plan.GustPlan`
 leaves; ``--ragged``/``--compact``/``--use-kernel`` map onto the plan's
-layout/dtype/backend knobs.
+layout/dtype/backend knobs.  GUST decode shares the continuous-batching
+machinery with the dense path.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch yi_6b --reduced \
@@ -43,6 +51,9 @@ def run_serving(
     use_kernel: bool = False,
     ragged: bool = False,
     compact: bool = False,
+    serial: bool = False,
+    temperature: float = 0.0,
+    eos_id=None,
     seed: int = 0,
 ):
     cfg = get_arch(arch)
@@ -56,16 +67,29 @@ def run_serving(
             density=density, gust_length=gust_length, use_kernel=use_kernel,
             ragged=ragged, compact=compact,
         )
-    sc = ServeConfig(batch=batch, seq_len=seq_len, dtype="float32", gust=gcfg)
+    sc = ServeConfig(batch=batch, seq_len=seq_len, dtype="float32", gust=gcfg,
+                     temperature=temperature, eos_id=eos_id,
+                     queue_capacity=max(requests, 64))
     loop = ServeLoop(lm, params, sc, seed=seed)
     rng = np.random.default_rng(seed)
+    # mixed-length trace: prompt lengths cycle between prompt_len//2 and
+    # prompt_len — exactly the workload per-slot positions exist for
+    lengths = [max(1, prompt_len // 2), prompt_len, max(1, 3 * prompt_len // 4)]
+    prompts = [
+        rng.integers(0, cfg.vocab, lengths[r % len(lengths)]).astype(np.int32)
+        for r in range(requests)
+    ]
     t0 = time.time()
     done = {}
-    for r in range(requests):
-        prompt = rng.integers(0, cfg.vocab, prompt_len).astype(np.int32)
-        rid = loop.submit(prompt, max_new=max_new)
+    if serial:  # one-request-at-a-time baseline
+        for prompt in prompts:
+            rid = loop.submit(prompt, max_new=max_new)
+            loop.run_to_completion()
+            done[rid] = loop.completed[rid]
+    else:  # continuous batching: enqueue the stream, drain the queue
+        rids = [loop.enqueue(prompt, max_new=max_new) for prompt in prompts]
         loop.run_to_completion()
-        done[rid] = loop.completed[rid]
+        done = {rid: loop.completed[rid] for rid in rids}
     dt = time.time() - t0
     toks = sum(len(v) for v in done.values())
     stats = {
@@ -73,6 +97,9 @@ def run_serving(
         "tokens_generated": toks,
         "wall_s": round(dt, 2),
         "tok_per_s": round(toks / dt, 1),
+        "decode_steps": loop.stats["decode_steps"],
+        "slot_occupancy": round(loop.occupancy, 4),
+        "mode": "serial" if serial else "continuous",
         "gust": bool(gust),
     }
     if gust and loop.gust_tree is not None:
@@ -105,13 +132,20 @@ def main():
     ap.add_argument("--compact", action="store_true",
                     help="bf16 values + int16 indices: halves the streamed "
                     "schedule bytes (the paper's packed-word analogue)")
+    ap.add_argument("--serial", action="store_true",
+                    help="one-request-at-a-time baseline (default is "
+                    "continuous batching over the admission queue)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="retire a request when it samples this token")
     args = ap.parse_args()
     _, stats = run_serving(
         args.arch, batch=args.batch, seq_len=args.seq_len,
         requests=args.requests, prompt_len=args.prompt_len,
         max_new=args.max_new, gust=args.gust, density=args.density,
         gust_length=args.gust_length, use_kernel=args.use_kernel,
-        ragged=args.ragged, compact=args.compact,
+        ragged=args.ragged, compact=args.compact, serial=args.serial,
+        temperature=args.temperature, eos_id=args.eos_id,
     )
     print(json.dumps(stats))
 

@@ -36,6 +36,7 @@ __all__ = [
     "init_attention",
     "attend_train",
     "init_cache",
+    "insert_slot",
     "prefill_into_cache",
     "decode_step",
     "cross_kv",
@@ -240,8 +241,32 @@ def init_cache(spec: AttnSpec, batch: int, seq_len: int, dtype=jnp.bfloat16):
     return {
         "k": jnp.zeros(shape, dtype),
         "v": jnp.zeros(shape, dtype),
-        "pos": jnp.full((c,), -1, jnp.int32),  # original position per slot
+        # original position per cache slot, per sequence: (B, c) so batch
+        # rows at different decode positions (continuous batching) mask
+        # independently — every cache leaf is batch-leading
+        "pos": jnp.full((batch, c), -1, jnp.int32),
     }
+
+
+def insert_slot(cache, one, slot, axis: int = 0):
+    """Slot-local cache insertion: write batch row 0 of the batch-1 cache
+    pytree ``one`` into batch row ``slot`` of ``cache``, leaving every
+    other row untouched.
+
+    Every cache leaf — dense/ring KV (``k``/``v``/``pos``), cross-attn
+    memory (``ck``/``cv``), and the recurrent states — is batch-leading
+    (at ``axis``; rep-stacked leaves are ``(R, B, ...)`` so pass
+    ``axis=1``), which makes admission in the serving loop a pure pytree
+    row scatter: a new request's prefill can never clobber another active
+    slot's cache.
+    """
+
+    def ins(full, single):
+        src = jax.lax.index_in_dim(single, 0, axis=axis, keepdims=False)
+        idx = (slice(None),) * axis + (slot,)
+        return full.at[idx].set(src.astype(full.dtype))
+
+    return jax.tree.map(ins, cache, one)
 
 
 def prefill_into_cache(p, x, spec: AttnSpec, cache, start: int = 0):
@@ -259,28 +284,32 @@ def prefill_into_cache(p, x, spec: AttnSpec, cache, start: int = 0):
     cache = {
         "k": cache["k"].at[:, slots].set(k[:, s - take :].astype(cache["k"].dtype)),
         "v": cache["v"].at[:, slots].set(v[:, s - take :].astype(cache["v"].dtype)),
-        "pos": cache["pos"].at[slots].set(tail_pos),
+        "pos": cache["pos"].at[:, slots].set(tail_pos),
     }
     return out, cache
 
 
 def decode_step(p, x, spec: AttnSpec, cache, pos):
-    """One token: x (B, 1, d), scalar/traced ``pos``.  Returns (y, cache)."""
-    positions = jnp.full((1,), pos, jnp.int32)
+    """One token: x (B, 1, d); ``pos`` is a scalar or a (B,) vector of
+    per-sequence positions (continuous batching serves mixed-length
+    requests, so every batch row decodes at its own position).  Returns
+    (y, cache)."""
+    b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((b,), pos, jnp.int32)
+    positions = pos[:, None]  # (B, 1): per-row rope + mask query positions
     q, k, v = _qkv(p, x, spec, positions)
     c = cache["k"].shape[1]
-    slot = pos % c
+    slot = pos % c  # (B,) ring placement per sequence
+    bidx = jnp.arange(b)
     kc = constrain_kv_cache(
-        jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), slot, axis=1
-        )
+        cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
     )
     vc = constrain_kv_cache(
-        jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), slot, axis=1
-        )
+        cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
     )
-    pc = jax.lax.dynamic_update_slice_in_dim(cache["pos"], positions, slot, axis=0)
+    pc = cache["pos"].at[bidx, slot].set(pos)
 
     # Flash-decode sharding: the cache is the big tensor, so the compute
     # follows ITS layout (sequence over "model").  GQA scores are taken in
@@ -288,7 +317,6 @@ def decode_step(p, x, spec: AttnSpec, cache, pos):
     # makes GSPMD reshard/replicate the whole 88-layer stack per step);
     # only the one-token q is reshaped/resharded.  The softmax reduces
     # over the sharded cache length via psums of (B,KV,G,1)-sized partials.
-    b = q.shape[0]
     q5 = q.reshape(b, 1, spec.n_kv, spec.groups, spec.d_head)
     scale = 1.0 / jnp.sqrt(spec.d_head).astype(jnp.float32)
     s = (
@@ -298,8 +326,10 @@ def decode_step(p, x, spec: AttnSpec, cache, pos):
         )
         * scale
     )  # (B, KV, G, 1, c)
-    msk = _mask(spec, positions, pc)  # (1, c)
-    s = jnp.where(msk[None, None, None], s, -jnp.inf)
+    # per-row mask: row i attends under its own query position pos[i]
+    # against its own cached key positions pc[i]
+    msk = jax.vmap(lambda qp, kp: _mask(spec, qp, kp))(positions, pc)  # (B,1,c)
+    s = jnp.where(msk[:, None, None], s, -jnp.inf)
     w = jax.nn.softmax(s, axis=-1)
     w = jnp.where(jnp.isnan(w), 0.0, w)
     o = jnp.einsum(

@@ -141,6 +141,12 @@ class LM:
     def init_caches(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
         return T.init_stack_caches(self._serve_stack(), batch, seq_len, dtype)
 
+    def insert_slot_caches(self, caches, one, slot):
+        """Slot-local admission: write batch row 0 of the batch-1 cache
+        pytree ``one`` (a fresh per-request prefill) into batch row
+        ``slot`` of ``caches``.  No other slot's KV/state is touched."""
+        return T.insert_slot_caches(caches, one, slot)
+
     def prefill(self, params, batch, caches, *, dtype=jnp.bfloat16):
         """Process the prompt; returns (last-position logits, caches)."""
         cfg = self.cfg
@@ -162,7 +168,9 @@ class LM:
         return logits, caches
 
     def decode_step(self, params, caches, tokens, pos, *, dtype=jnp.bfloat16):
-        """One token for every sequence.  tokens: (B, 1) int32; pos scalar."""
+        """One token for every sequence.  tokens: (B, 1) int32; ``pos`` is
+        a scalar or a (B,) int32 vector of per-sequence positions (mixed
+        prompt lengths decode each row at its own position)."""
         cfg = self.cfg
         x = self._embed_tokens(params, tokens, dtype)
         stack_params = params["decoder"] if cfg.is_encdec else params["stack"]

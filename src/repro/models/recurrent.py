@@ -8,6 +8,13 @@ All three expose the same triple of regimes as attention:
   * ``*_decode``  — one-token state update, O(1) in sequence length (this
     is why these architectures run the ``long_500k`` shape).
 
+Serving contract: every state leaf is **batch-leading** (``(B, ...)``),
+so the serving loop's slot-local admission (``attention.insert_slot``,
+re-exported here for states) can write one request's freshly-prefilled
+state into its batch row without touching any other in-flight slot.
+Decode updates are row-independent, so mixed-length continuous batching
+is bit-identical per request to a solo run.
+
 mLSTM (arXiv:2405.04517): matrix memory ``C_t = f_t C_{t-1} + i_t v_t
 k_t^T`` with exponential gating, evaluated **chunkwise-parallel**: within a
 chunk the quadratic stabilized-gate form (MXU matmuls), across chunks an
@@ -29,9 +36,11 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from .attention import insert_slot
 from .layers import _he
 
 __all__ = [
+    "insert_slot",
     "MLSTMSpec",
     "init_mlstm",
     "mlstm_train",

@@ -45,6 +45,7 @@ __all__ = [
     "stack_prefill",
     "stack_decode",
     "init_stack_caches",
+    "insert_slot_caches",
 ]
 
 
@@ -356,6 +357,22 @@ def init_stack_caches(sc: StackCfg, batch: int, seq_len: int, dtype=jnp.bfloat16
         for i in range(sc.n_tail)
     ]
     return {"reps": tuple(rep_caches), "tail": tail_caches}
+
+
+def insert_slot_caches(caches, one, slot):
+    """Serving admission: copy batch row 0 of a batch-1 stack-cache pytree
+    into batch row ``slot`` of the full stack cache (all layers, attention
+    KV + recurrent states alike).  Rep-stacked leaves carry batch at axis
+    1 (``(R, B, ...)``), tail leaves at axis 0."""
+    reps = tuple(
+        A.insert_slot(cf, co, slot, axis=1)
+        for cf, co in zip(caches["reps"], one["reps"])
+    )
+    tail = [
+        A.insert_slot(cf, co, slot, axis=0)
+        for cf, co in zip(caches["tail"], one["tail"])
+    ]
+    return {"reps": reps, "tail": tail}
 
 
 def stack_prefill(params, x, sc: StackCfg, caches, memory=None, start: int = 0):

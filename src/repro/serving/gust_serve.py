@@ -172,6 +172,10 @@ def decode_step_gust(lm: LM, params, gust, caches, tokens, pos, *,
     """Mirror of LM.decode_step with the per-layer MLP routed through GUST.
 
     ``gust`` is the pytree produced by :func:`gustify` (or dryrun_specs).
+    ``pos`` is a scalar or (B,) vector of per-slot positions — the GUST
+    path shares the continuous-batching machinery (slot-local caches,
+    per-row attention masks) with the dense decode, so mixed-length
+    request batches serve correctly through ``ServeLoop`` here too.
     """
     sc = lm.stack
     bc = sc.pattern[0]

@@ -10,6 +10,7 @@ NamedSharding placement used by the dry-run and the serve driver.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Optional
 
 import jax
@@ -49,9 +50,16 @@ def cache_shardings(lm: LM, mesh: Mesh, batch: int, seq_len: int,
 
 def cache_bytes(lm: LM, batch: int, seq_len: int,
                 policy: CachePolicy = CachePolicy()) -> int:
-    """Total cache footprint (all layers, all sequences)."""
+    """Total cache footprint (all layers, all sequences).
+
+    Host-side accounting stays host-side: ``math.prod`` over the Python
+    shape tuple, in arbitrary-precision ints.  (The previous
+    ``jnp.prod(jnp.array(shape))`` dispatched device work per leaf and
+    overflowed int32 for caches above 2**31 elements — i.e. exactly the
+    123B-scale configs this helper exists to size.)
+    """
     specs = cache_specs(lm, batch, seq_len, policy)
     return sum(
-        int(jnp.dtype(x.dtype).itemsize) * int(jnp.prod(jnp.array(x.shape)))
+        jnp.dtype(x.dtype).itemsize * math.prod(x.shape)
         for x in jax.tree.leaves(specs)
     )

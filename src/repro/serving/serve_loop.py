@@ -1,16 +1,35 @@
-"""Serving driver: prefill/decode step factories + batched request loop.
+"""Serving driver: prefill/decode step factories + continuous batching.
 
 ``make_serve_fns`` returns jit-able pure step functions (the things the
-dry-run lowers); ``ServeLoop`` is the host-side driver that batches
-requests, runs prefill for new arrivals and decode for in-flight ones,
-applies greedy/temperature sampling, and retires finished sequences —
-continuous batching in its simplest correct form.
+dry-run lowers); ``ServeLoop`` is the host-side driver implementing
+*correct* continuous batching over fixed decode slots:
+
+  * **Per-slot prefill** — admission runs the new request's prompt as a
+    batch-1 prefill and scatters the resulting cache into ONLY its own
+    batch row (``LM.insert_slot_caches``); other in-flight slots' KV is
+    never touched.
+  * **Per-slot positions** — every decode step carries a (B,) position
+    vector, so requests with different prompt lengths each attend at
+    their own position (``models.attention.decode_step`` masks per row).
+  * **On-device sampling** — batched greedy / max-subtracted temperature
+    sampling under ``jax.random``; per-(request, token) keys make a
+    request's sampled continuation independent of what else is
+    co-scheduled in the batch.
+  * **Bounded admission queue** — ``enqueue`` parks requests up to
+    ``ServeConfig.queue_capacity``; ``step`` admits into free slots and
+    retires sequences on EOS or ``max_new``, so the loop drains a request
+    stream without manual slot management.
+
+Per-request outputs are bit-identical to a solo run of the same request
+(locked by tests/test_serving.py): decode compute is row-independent and
+admission writes are slot-local.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +39,7 @@ from repro.models.model_zoo import LM
 
 from .gust_serve import GustServeConfig, decode_step_gust, gustify
 
-__all__ = ["ServeConfig", "make_serve_fns", "ServeLoop"]
+__all__ = ["ServeConfig", "make_serve_fns", "make_sampler", "ServeLoop"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +48,8 @@ class ServeConfig:
     seq_len: int  # cache capacity
     dtype: str = "bfloat16"
     temperature: float = 0.0  # 0 = greedy
+    eos_id: Optional[int] = None  # retire a slot when it samples this token
+    queue_capacity: int = 64  # bounded admission queue (enqueue raises when full)
     gust: Optional[GustServeConfig] = None  # None = dense decode
 
     @property
@@ -37,11 +58,17 @@ class ServeConfig:
 
 
 def make_serve_fns(lm: LM, cfg: ServeConfig, gust_tree=None):
-    """Returns (prefill_fn, decode_fn, init_caches_fn), all pure."""
+    """Returns (prefill_fn, decode_fn, init_caches_fn), all pure.
+
+    ``init_caches_fn`` takes an optional batch override (the serve loop
+    prefills new requests at batch=1); ``decode_fn`` takes ``pos`` as a
+    (B,) int32 vector of per-slot positions (a scalar still works for
+    homogeneous callers such as the dry-run).
+    """
     dtype = cfg.jnp_dtype
 
-    def init_caches():
-        return lm.init_caches(cfg.batch, cfg.seq_len, dtype)
+    def init_caches(batch: Optional[int] = None):
+        return lm.init_caches(batch or cfg.batch, cfg.seq_len, dtype)
 
     def prefill_fn(params, batch, caches):
         return lm.prefill(params, batch, caches, dtype=dtype)
@@ -63,6 +90,35 @@ def make_serve_fns(lm: LM, cfg: ServeConfig, gust_tree=None):
     return prefill_fn, decode_fn, init_caches
 
 
+def make_sampler(temperature: float) -> Callable:
+    """Jitted batched sampler:
+    (logits (B, V), base_key, rid_step (B, 2) int32) -> (B,) int32.
+
+    Greedy at ``temperature <= 0``.  The temperature path subtracts the
+    per-row max before scaling, so logits of magnitude ~1e3+ stay finite
+    (the host-side ``np.exp(logits / T)`` it replaces overflowed to
+    inf/NaN); sampling itself is ``jax.random.categorical``'s Gumbel
+    trick, which never exponentiates the logits.  Row r's key is
+    ``fold_in(fold_in(base_key, rid_step[r, 0]), rid_step[r, 1])`` —
+    per-(request id, token index), derived INSIDE the jit so a decode
+    step costs one fused call, not 2B host-side fold_in dispatches.
+    """
+
+    def sample(logits, base_key, rid_step):
+        logits = logits.astype(jnp.float32)
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        z = (logits - logits.max(axis=-1, keepdims=True)) / temperature
+
+        def one(row, rs):
+            key = jax.random.fold_in(jax.random.fold_in(base_key, rs[0]), rs[1])
+            return jax.random.categorical(key, row)
+
+        return jax.vmap(one)(z, rid_step).astype(jnp.int32)
+
+    return jax.jit(sample)
+
+
 @dataclasses.dataclass
 class _Slot:
     active: bool = False
@@ -75,9 +131,13 @@ class _Slot:
 class ServeLoop:
     """Host-side continuous-batching driver over fixed decode slots.
 
-    Requests are (prompt_tokens, max_new_tokens).  For simplicity each
-    admission runs a (batched) prefill of the whole current slot set; the
-    decode step then advances every active slot one token per call.
+    Requests are (prompt_tokens, max_new_tokens).  ``submit`` admits
+    immediately into a free slot (raising when none is free);
+    ``enqueue`` parks the request in the bounded admission queue and
+    ``step``/``run_to_completion`` admit as slots free up.  Each
+    admission prefills ONLY its own slot (batch-1 prefill + slot-local
+    cache insert) and each decode step advances every active slot one
+    token at that slot's own position.
     """
 
     def __init__(self, lm: LM, params, cfg: ServeConfig, seed: int = 0):
@@ -89,65 +149,135 @@ class ServeLoop:
         pre, dec, init = make_serve_fns(lm, cfg, gust_tree)
         self._prefill = jax.jit(pre)
         self._decode = jax.jit(dec)
+        # donate the full cache: insertion scatters one batch row and the
+        # caller rebinds self.caches, so XLA can update in place instead
+        # of copying every layer's KV per admission (no-op on CPU)
+        self._insert = jax.jit(lm.insert_slot_caches, donate_argnums=0)
+        self._sampler = make_sampler(cfg.temperature)
         self.caches = init()
+        # immutable batch-1 cache template reused by every admission
+        # (prefill is pure, so the template is never mutated)
+        self._cache_template_b1 = init(1)
         self.slots = [_Slot() for _ in range(cfg.batch)]
-        self._rng = np.random.default_rng(seed)
+        self._base_key = jax.random.PRNGKey(seed)
         self._next_id = 0
+        self.pending: Deque[Tuple[int, np.ndarray, int]] = collections.deque()
         self.completed: Dict[int, List[int]] = {}
+        self.stats = {"decode_steps": 0, "active_slot_steps": 0, "prefills": 0}
+
+    # -- admission ---------------------------------------------------------
+    def enqueue(self, prompt: np.ndarray, max_new: int) -> int:
+        """Park one request in the bounded admission queue.  Returns id."""
+        if len(self.pending) >= self.cfg.queue_capacity:
+            raise RuntimeError(
+                f"admission queue full (capacity {self.cfg.queue_capacity})"
+            )
+        rid = self._next_id
+        self._next_id += 1
+        self.pending.append((rid, np.asarray(prompt, np.int32), int(max_new)))
+        return rid
 
     def submit(self, prompt: np.ndarray, max_new: int) -> int:
-        """Admit one request into a free slot; runs its prefill. Returns id."""
+        """Admit one request into a free slot NOW; runs its prefill."""
         free = [i for i, s in enumerate(self.slots) if not s.active]
         if not free:
             raise RuntimeError("no free slots")
-        i = free[0]
         rid = self._next_id
         self._next_id += 1
-        b = self.cfg.batch
-        toks = np.zeros((b, prompt.shape[0]), np.int32)
-        toks[i] = prompt
-        logits, caches = self._prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, self.caches
-        )
-        # NOTE: batched prefill refreshes every slot's cache with the padded
-        # prompt; correct single-request flow (slot admission happens one at
-        # a time between decode bursts).  Multi-slot isolation is exercised
-        # in tests via one-request-at-a-time admission.
-        self.caches = caches
-        first = self._sample(np.asarray(logits)[i, -1])
-        self.slots[i] = _Slot(True, rid, int(prompt.shape[0]), [int(first)], max_new)
+        self._admit(free[0], rid, np.asarray(prompt, np.int32), int(max_new))
         return rid
 
-    def _sample(self, logits_row: np.ndarray) -> int:
-        if self.cfg.temperature <= 0:
-            return int(np.argmax(logits_row))
-        p = np.exp(logits_row / self.cfg.temperature)
-        p /= p.sum()
-        return int(self._rng.choice(p.shape[0], p=p))
+    def _admit(self, i: int, rid: int, prompt: np.ndarray, max_new: int):
+        """Per-slot prefill: batch-1 prompt pass + slot-local cache insert.
 
+        The prefill jit keys on the exact prompt length, so each distinct
+        length in the stream compiles once (exact-length prefill is what
+        keeps admission bit-identical to a solo run; length bucketing
+        needs masked prefill — see ROADMAP open items)."""
+        logits, one = self._prefill(
+            self.params,
+            {"tokens": jnp.asarray(prompt)[None]},
+            self._cache_template_b1,
+        )
+        self.caches = self._insert(self.caches, one, i)
+        first = int(self._sample_rows(logits[:, -1], [(rid, 0)])[0])
+        self.stats["prefills"] += 1
+        slot = _Slot(True, rid, int(prompt.shape[0]), [first], max_new)
+        if self._finished(slot, first):
+            self.completed[rid] = slot.generated
+        else:
+            self.slots[i] = slot
+
+    def _admit_from_queue(self):
+        free = [i for i, s in enumerate(self.slots) if not s.active]
+        while free and self.pending:
+            rid, prompt, max_new = self.pending.popleft()
+            self._admit(free.pop(0), rid, prompt, max_new)
+            # _admit may complete the request instantly (EOS/max_new=1),
+            # leaving the slot free — recompute instead of assuming
+            free = [i for i, s in enumerate(self.slots) if not s.active]
+
+    # -- sampling ----------------------------------------------------------
+    def _sample_rows(self, logits_rows, rid_step: List[Tuple[int, int]]):
+        """Sample one token per row.  ``rid_step[r] = (request_id, token
+        index)`` seeds row r's key, making each request's sampled
+        continuation independent of which other requests share the batch."""
+        return np.asarray(self._sampler(
+            logits_rows, self._base_key, jnp.asarray(rid_step, jnp.int32)
+        ))
+
+    def _finished(self, slot: _Slot, token: int) -> bool:
+        if self.cfg.eos_id is not None and token == self.cfg.eos_id:
+            return True
+        return len(slot.generated) >= slot.max_new + 1
+
+    # -- decode ------------------------------------------------------------
     def step(self) -> int:
-        """One decode step for all active slots; returns #active."""
+        """Admit from the queue, then one decode step for all active
+        slots (each at its own position); returns #active after retirement."""
+        self._admit_from_queue()
         active = [i for i, s in enumerate(self.slots) if s.active]
         if not active:
             return 0
         toks = np.zeros((self.cfg.batch, 1), np.int32)
+        pos = np.zeros((self.cfg.batch,), np.int32)
         for i in active:
             toks[i, 0] = self.slots[i].generated[-1]
-        pos = max(self.slots[i].pos for i in active)
+            pos[i] = self.slots[i].pos
         logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(toks), jnp.int32(pos)
+            self.params, self.caches, jnp.asarray(toks), jnp.asarray(pos)
         )
-        logits = np.asarray(logits)
+        sampled = self._sample_rows(
+            logits[:, 0],
+            [
+                # inactive rows sample garbage that is discarded; any
+                # non-negative key seed works (fold_in is uint32)
+                (s.request_id, len(s.generated)) if s.active else (0, 0)
+                for s in self.slots
+            ],
+        )
+        self.stats["decode_steps"] += 1
+        self.stats["active_slot_steps"] += len(active)
         for i in active:
             s = self.slots[i]
-            s.generated.append(self._sample(logits[i, 0]))
+            tok = int(sampled[i])
+            s.generated.append(tok)
             s.pos += 1
-            if len(s.generated) >= s.max_new + 1:
+            if self._finished(s, tok):
                 self.completed[s.request_id] = s.generated
                 self.slots[i] = _Slot()
         return len([s for s in self.slots if s.active])
 
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of decode-slot work spent on live requests."""
+        steps = self.stats["decode_steps"]
+        if steps == 0:
+            return 0.0
+        return self.stats["active_slot_steps"] / (steps * self.cfg.batch)
+
     def run_to_completion(self, max_steps: int = 10_000):
+        """Drain the admission queue and every active slot."""
         for _ in range(max_steps):
-            if self.step() == 0:
+            if self.step() == 0 and not self.pending:
                 return

@@ -1,5 +1,9 @@
-"""Serving-layer tests: continuous-batching loop, GUST-sparse decode
-(identity at density 1.0, Pallas/XLA parity), GustLinear, cache sizing."""
+"""Serving-layer tests: continuous-batching loop (per-slot prefill +
+per-slot positions: concurrent mixed-length serving is bit-identical per
+request to solo serving), GUST-sparse decode (identity at density 1.0,
+Pallas/XLA parity), GustLinear, cache sizing."""
+
+import math
 
 import numpy as np
 import pytest
@@ -16,10 +20,21 @@ from repro.serving import (
     ServeConfig,
     ServeLoop,
     cache_bytes,
+    cache_specs,
+    make_sampler,
 )
 from repro.serving.gust_serve import decode_step_gust, dryrun_specs, gustify
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _solo(lm, params, prompt, max_new, *, batch=4, seq_len=64, gust=None):
+    """Serve one request alone on an otherwise-idle engine."""
+    sc = ServeConfig(batch=batch, seq_len=seq_len, dtype="float32", gust=gust)
+    loop = ServeLoop(lm, params, sc)
+    rid = loop.submit(np.asarray(prompt, np.int32), max_new=max_new)
+    loop.run_to_completion()
+    return loop.completed[rid]
 
 
 @pytest.fixture(scope="module")
@@ -139,6 +154,123 @@ def test_gust_linear_use_kernel_regression():
     np.testing.assert_allclose(ys[True], ys[False], rtol=1e-5, atol=1e-5)
 
 
+def test_second_admission_mid_decode_is_isolated(dense_lm):
+    """Regression (ISSUE 4 bug 1): admitting request B while request A is
+    mid-decode must not touch A's KV cache.  The old full-batch prefill
+    clobbered every slot with B's padded prompt; per-slot prefill writes
+    only B's batch row, so A's continuation is bit-identical to solo."""
+    lm, params = dense_lm
+    pa = np.arange(8, dtype=np.int32)
+    pb = np.arange(3, 8, dtype=np.int32)
+    solo_a = _solo(lm, params, pa, max_new=8)
+    solo_b = _solo(lm, params, pb, max_new=6)
+    loop = ServeLoop(lm, params, ServeConfig(batch=4, seq_len=64, dtype="float32"))
+    ra = loop.submit(pa, max_new=8)
+    for _ in range(3):  # A is now mid-decode
+        loop.step()
+    rb = loop.submit(pb, max_new=6)
+    loop.run_to_completion()
+    assert loop.completed[ra] == solo_a
+    assert loop.completed[rb] == solo_b
+
+
+def test_mixed_length_concurrent_matches_solo(dense_lm):
+    """Regression (ISSUE 4 bug 2): slots with different prompt lengths
+    decode at their OWN positions.  The old step() decoded everyone at
+    max(slot.pos), corrupting every shorter request."""
+    lm, params = dense_lm
+    prompts = [np.arange(5, dtype=np.int32),
+               np.arange(11, dtype=np.int32),
+               np.arange(2, 9, dtype=np.int32)]
+    solos = [_solo(lm, params, p, max_new=6) for p in prompts]
+    loop = ServeLoop(lm, params, ServeConfig(batch=4, seq_len=64, dtype="float32"))
+    rids = [loop.submit(p, max_new=6) for p in prompts]
+    loop.run_to_completion()
+    for rid, solo in zip(rids, solos):
+        assert loop.completed[rid] == solo
+
+
+def test_gust_mixed_length_concurrent_matches_solo(dense_lm):
+    """The GUST decode path runs through the same per-slot machinery."""
+    lm, params = dense_lm
+    gcfg = GustServeConfig(density=0.5, gust_length=16)
+    prompts = [np.arange(4, dtype=np.int32), np.arange(9, dtype=np.int32)]
+    solos = [_solo(lm, params, p, max_new=4, batch=2, gust=gcfg) for p in prompts]
+    sc = ServeConfig(batch=2, seq_len=64, dtype="float32", gust=gcfg)
+    loop = ServeLoop(lm, params, sc)
+    rids = [loop.submit(p, max_new=4) for p in prompts]
+    loop.run_to_completion()
+    for rid, solo in zip(rids, solos):
+        assert loop.completed[rid] == solo
+
+
+def test_queue_admission_drains_stream(dense_lm):
+    """Bounded admission queue: more requests than slots drain through
+    step() with no manual slot management; capacity overflow raises."""
+    lm, params = dense_lm
+    sc = ServeConfig(batch=2, seq_len=64, dtype="float32", queue_capacity=6)
+    loop = ServeLoop(lm, params, sc)
+    rng = np.random.default_rng(0)
+    rids = [loop.enqueue(rng.integers(0, lm.cfg.vocab, 3 + r).astype(np.int32),
+                         max_new=3) for r in range(6)]
+    with pytest.raises(RuntimeError, match="queue full"):
+        loop.enqueue(np.arange(4, dtype=np.int32), max_new=1)
+    loop.run_to_completion()
+    assert not loop.pending
+    assert sorted(loop.completed) == sorted(rids)
+    assert all(len(loop.completed[r]) == 4 for r in rids)
+    # 6 requests on 2 slots: at least 3 waves of decode, fully occupied
+    assert loop.stats["prefills"] == 6
+    assert loop.occupancy > 0.9
+
+
+def test_eos_retirement(dense_lm):
+    """A slot retires as soon as it samples eos_id."""
+    lm, params = dense_lm
+    prompt = np.arange(7, dtype=np.int32)
+    full = _solo(lm, params, prompt, max_new=8)
+    eos = full[2]
+    k = full.index(eos)  # first time greedy decode emits it
+    sc = ServeConfig(batch=2, seq_len=64, dtype="float32", eos_id=int(eos))
+    loop = ServeLoop(lm, params, sc)
+    rid = loop.submit(prompt, max_new=8)
+    loop.run_to_completion()
+    assert loop.completed[rid] == full[: k + 1]
+
+
+def test_sampler_max_subtracted_large_logits():
+    """Regression: the host sampler did np.exp(logits / T) and produced
+    inf/NaN for |logits| ~ 1e3.  The on-device sampler is max-subtracted:
+    huge logits sample fine, and the argmax-dominant token wins."""
+    sampler = make_sampler(1.0)
+    logits = jnp.asarray([[1000.0, 0.0, -500.0],
+                          [2000.0, 2000.0 - 30.0, 0.0]], jnp.float32)
+    rid_step = jnp.asarray([[0, 0], [1, 5]], jnp.int32)
+    for seed in range(8):
+        out = np.asarray(sampler(logits, jax.random.PRNGKey(seed), rid_step))
+        assert out.shape == (2,) and out.dtype == np.int32
+        # p(other) ~ e^-1000 and e^-30: the dominant logit must win
+        assert out[0] == 0 and out[1] == 0
+    greedy = make_sampler(0.0)
+    out = np.asarray(greedy(logits, jax.random.PRNGKey(0), rid_step))
+    np.testing.assert_array_equal(out, [0, 0])
+
+
+def test_temperature_serving_is_reproducible(dense_lm):
+    """Per-(request, token) sampling keys: same seed -> same stream, and
+    a request's sampled continuation doesn't depend on co-scheduling."""
+    lm, params = dense_lm
+    sc = ServeConfig(batch=2, seq_len=64, dtype="float32", temperature=0.8)
+    outs = []
+    for _ in range(2):
+        loop = ServeLoop(lm, params, sc, seed=7)
+        rid = loop.submit(np.arange(6, dtype=np.int32), max_new=5)
+        loop.run_to_completion()
+        outs.append(loop.completed[rid])
+    assert outs[0] == outs[1]
+    assert all(0 <= t < lm.cfg.padded_vocab for t in outs[0])
+
+
 def test_cache_bytes_accounting():
     cfg = get_arch("yi_6b").reduced()
     lm = build_model(cfg)
@@ -147,3 +279,19 @@ def test_cache_bytes_accounting():
     assert n > 0
     n32 = cache_bytes(lm, batch=2, seq_len=64, policy=CachePolicy(dtype="float32"))
     assert n32 > n
+
+
+def test_cache_bytes_no_int32_overflow_at_123b_scale():
+    """Regression: jnp.prod(jnp.array(shape)) overflowed int32 above 2**31
+    elements per leaf.  The 123B config at serving shapes crosses that;
+    accounting must match an independent host-side math.prod sum."""
+    lm = build_model(get_arch("mistral_large_123b"))
+    batch, seq = 8, 32_768
+    n = cache_bytes(lm, batch=batch, seq_len=seq)
+    expect = sum(
+        jnp.dtype(x.dtype).itemsize * math.prod(x.shape)
+        for x in jax.tree.leaves(cache_specs(lm, batch, seq))
+    )
+    assert n == expect
+    assert n > 2**31  # the overflow regime: old code went negative/garbage
+    assert n % 2 == 0  # bf16 leaves: whole itemsize multiples
