@@ -1,0 +1,239 @@
+"""Resident vs segment-local Buffer-Filler gather across matrix widths.
+
+The resident kernel reconstructs the Buffer-Filler gather as a one-hot
+contraction over **all** ``seg_count = ceil(n/l)`` column segments and
+holds the whole vector in VMEM, so both gather FLOPs and x footprint
+scale with matrix *width* — O(n) per slot regardless of how few vector
+entries a window actually touches.  The segment-local path (ISSUE 5)
+streams only each block's ``S_blk`` referenced x tiles via the pack-time
+segment table: O(S_blk) per slot, one (1, l, B) tile of VMEM.
+
+This benchmark synthesizes locality-structured schedules (each window
+draws its columns from a few segments, like ``balance_lanes`` locality on
+real matrices) at widths n ∈ {4k, 64k, 512k}, asserts bit-identical
+output between the two gather modes, and records to BENCH_gather.json:
+
+  * the gather-FLOP reduction from :meth:`GustPlan.cost`
+    (``gather_flops_resident / gather_flops_local`` — exactly
+    ``seg_count / S_blk``, deterministic);
+  * Pallas-path wall time for both modes;
+  * the f32 x VMEM footprint of each mode at the bench batch vs a 16 MB
+    VMEM budget — at the largest width the resident mode no longer fits
+    (the width cap) while ``gather="local"`` executes it.
+
+Acceptance gates (ISSUE 5): >= 4x gather-FLOP reduction at every width
+(``--min-flop-ratio``, deterministic and stays hard) and measured
+wall-clock speedup at n >= 64k (``--min-time-speedup``; lower to 0 on
+noisy shared CI runners — same policy as ragged_bench).
+
+Usage:
+    PYTHONPATH=src python benchmarks/gather_bench.py
+        [--widths 4096 65536 524288] [--windows 32] [--l 128]
+        [--segs-per-window 4] [--batch 8] [--iters 3] [--tiny]
+        [--out BENCH_gather.json]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.formats import GustSchedule
+from repro.core.plan import PlanConfig, plan
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024  # one TPU core's VMEM
+
+
+def synth_local_schedule(num_windows: int, l: int, n: int,
+                         segs_per_window: int, c_w: int = 8,
+                         seed: int = 0) -> GustSchedule:
+    """Fabricate a scheduled format with per-window segment locality:
+    every window's columns come from ``segs_per_window`` random segments
+    (lane-structured, straight or lane-reversed, like the real scheduler
+    emits after load-balance step 3)."""
+    rng = np.random.default_rng(seed)
+    seg_count = n // l
+    window_starts = np.arange(num_windows + 1, dtype=np.int64) * c_w
+    c_total = int(window_starts[-1])
+    m = num_windows * l
+    m_sch = rng.standard_normal((c_total, l)).astype(np.float32)
+    row_sch = rng.integers(0, l, (c_total, l)).astype(np.int32)
+    lane = np.arange(l, dtype=np.int32)
+    # per-window segment working set; every cycle row draws from it
+    seg = np.empty((c_total, l), np.int32)
+    for w in range(num_windows):
+        pool = rng.choice(seg_count, min(segs_per_window, seg_count),
+                          replace=False)
+        seg[w * c_w:(w + 1) * c_w] = rng.choice(pool, (c_w, l))
+    flip = rng.integers(0, 2, (c_total, l)).astype(bool)
+    off = np.where(flip, l - 1 - lane[None, :], lane[None, :])
+    col_sch = seg * l + off
+    return GustSchedule(
+        l=l, shape=(m, n), nnz=c_total * l, m_sch=m_sch, row_sch=row_sch,
+        col_sch=col_sch, window_starts=window_starts,
+        row_perm=np.arange(m, dtype=np.int64),
+        valid=np.ones((c_total, l), dtype=bool),
+    )
+
+
+def bench(fn, iters: int) -> float:
+    fn()  # warmup: jit compile + allocator pools
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--widths", type=int, nargs="+",
+                    default=[4096, 65536, 524288])
+    ap.add_argument("--windows", type=int, default=32)
+    ap.add_argument("--l", type=int, default=128)
+    ap.add_argument("--segs-per-window", type=int, default=4)
+    ap.add_argument("--c-blk", type=int, default=32,
+                    help="colors per window == pack block height: larger "
+                    "blocks amortize per-grid-step overhead over more "
+                    "gather compute (the regime real schedules run in)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--min-flop-ratio", type=float, default=4.0,
+                    help="fail if the cost-model gather-FLOP reduction is "
+                    "below this at any width (0 = report-only)")
+    ap.add_argument("--min-time-speedup", type=float, default=1.0,
+                    help="fail if the local Pallas path is not at least "
+                    "this much faster at n >= 64k; lower to 0 on noisy "
+                    "runners — the FLOP gate stays hard")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small widths, wall-clock report-only, "
+                    "separate output file (never clobbers the committed "
+                    "full-run record)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.tiny:
+        args.widths = [4096, 16384]
+        args.windows = min(args.windows, 8)
+        args.batch = min(args.batch, 2)
+        args.min_time_speedup = 0.0
+    if args.out is None:
+        args.out = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_gather_tiny.json" if args.tiny else "BENCH_gather.json",
+        )
+
+    results = []
+    for n in args.widths:
+        sched = synth_local_schedule(
+            args.windows, args.l, n, args.segs_per_window, c_w=args.c_blk
+        )
+        plans = {
+            mode: plan(
+                sched,
+                PlanConfig(layout="padded", backend="pallas", gather=mode,
+                           c_blk=args.c_blk),
+                cache=None,
+            )
+            for mode in ("resident", "local")
+        }
+        p_auto = plan(sched, PlanConfig(layout="padded", backend="pallas",
+                                        c_blk=args.c_blk), cache=None)
+        cost = plans["local"].cost()
+        x = jnp.asarray(
+            np.random.default_rng(1).standard_normal((n, args.batch)),
+            jnp.float32,
+        )
+        y_res = np.asarray(plans["resident"].spmm(x))
+        y_loc = np.asarray(plans["local"].spmm(x))
+        assert np.array_equal(y_res, y_loc), \
+            "resident/local gather outputs diverged"
+
+        t_res = bench(lambda: plans["resident"].spmm(x).block_until_ready(),
+                      args.iters)
+        t_loc = bench(lambda: plans["local"].spmm(x).block_until_ready(),
+                      args.iters)
+        # per-grid-step VMEM working set of each mode: x residency (whole
+        # padded vector vs one block's tile set) + the streamed schedule
+        # tiles + the (l, B) accumulator tile (f32).  The resident number
+        # is what caps the width: it scales with n, the local one with
+        # S_blk only.
+        tiles = (3 * args.c_blk * args.l + args.l * args.batch) * 4
+        x_res_bytes = cost.x_vmem_bytes_resident * args.batch + tiles
+        x_loc_bytes = cost.x_vmem_bytes_local * args.batch + tiles
+        rec = {
+            "n": n,
+            "l": args.l,
+            "windows": args.windows,
+            "batch": args.batch,
+            "seg_count": n // args.l,
+            "s_blk": cost.s_blk,
+            "locality_ratio": round(cost.locality_ratio, 4),
+            "auto_gather": p_auto.gather_mode,
+            "gather_flops_resident": cost.gather_flops_resident,
+            "gather_flops_local": cost.gather_flops_local,
+            "flop_ratio": round(
+                cost.gather_flops_resident
+                / max(cost.gather_flops_local, 1), 2
+            ),
+            "x_vmem_bytes_resident": x_res_bytes,
+            "x_vmem_bytes_local": x_loc_bytes,
+            "resident_fits_vmem": x_res_bytes <= VMEM_BUDGET_BYTES,
+            "local_fits_vmem": x_loc_bytes <= VMEM_BUDGET_BYTES,
+            "resident_s": round(t_res, 5),
+            "local_s": round(t_loc, 5),
+            "time_speedup": round(t_res / t_loc, 2),
+        }
+        results.append(rec)
+        cap = "" if rec["resident_fits_vmem"] else \
+            "  [resident x exceeds 16MB VMEM budget — local-only width]"
+        print(f"n={n:>7}  segs {rec['seg_count']:>5} -> S_blk "
+              f"{rec['s_blk']:>3} ({rec['flop_ratio']:.1f}x fewer gather "
+              f"FLOPs)  time {t_res*1e3:9.2f} -> {t_loc*1e3:9.2f} ms "
+              f"({rec['time_speedup']:.2f}x)  auto={rec['auto_gather']}"
+              f"{cap}")
+
+    payload = {"bench": "resident vs segment-local Buffer-Filler gather",
+               "vmem_budget_bytes": VMEM_BUDGET_BYTES,
+               "results": results}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print("wrote", args.out)
+
+    # above the DEFAULT_LOCAL_MIN_SEGS width floor, auto must pick the
+    # local mode (below it the per-grid-step overhead wins and resident
+    # is the right call — the n=4k row documents that regime)
+    bad_auto = [r for r in results
+                if r["n"] >= 65536 and r["auto_gather"] != "local"]
+    if bad_auto:
+        raise SystemExit(
+            f"FAIL: gather='auto' resolved to resident at n="
+            f"{[r['n'] for r in bad_auto]} despite locality"
+        )
+    worst_flops = min(r["flop_ratio"] for r in results)
+    if worst_flops < args.min_flop_ratio:
+        raise SystemExit(
+            f"FAIL: segment-local gather only cuts FLOPs {worst_flops}x "
+            f"(< {args.min_flop_ratio}x)"
+        )
+    wide = [r for r in results if r["n"] >= 65536]
+    if wide:
+        # the largest widths are where the resident mode stops fitting:
+        # local must still fit (and did execute, asserted above)
+        widest = max(wide, key=lambda r: r["n"])
+        if not widest["local_fits_vmem"]:
+            raise SystemExit("FAIL: local x working set exceeds VMEM")
+        worst_time = min(r["time_speedup"] for r in wide)
+        if worst_time < args.min_time_speedup:
+            raise SystemExit(
+                f"FAIL: local path only {worst_time}x faster "
+                f"(< {args.min_time_speedup}x) at n >= 64k"
+            )
+
+
+if __name__ == "__main__":
+    main()

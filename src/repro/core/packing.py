@@ -61,8 +61,33 @@ contract as a type.  The steps themselves:
    ``repad_to_blocks``, layer stacking, window padding for the
    distributed split) must preserve all of the above.
 
+   Gather-locality leaves (PR 5).  Both layouts additionally carry a
+   *segment-local* gather table so the kernels can stream only the x
+   tiles a block actually references instead of holding all of x
+   resident in VMEM:
+     * ``seg_blk`` ``(T_blk, S_blk)`` int32 — the distinct column
+       segments (``col // l``) referenced by each ``(c_blk, l)`` stream
+       block, sorted ascending, padded to the per-schedule fixed
+       ``S_blk`` with segment 0 (always in-bounds);
+     * ``col_loc`` — ``col_blk`` remapped to block-local segment ids:
+       ``col_loc = local_seg * l + (col_blk % l)`` where ``local_seg``
+       is the column's position in its block's ``seg_blk`` row.  The
+       lane structure is preserved (``col_loc % l == col_blk % l``) and
+       padding slots still hold the slot's own lane (segment 0 sorts
+       first, so lane-valued padding columns map to local slot 0).
+   ``S_blk`` is a static aux field; the tables are a pure function of
+   ``(col_blk, l, c_blk)`` (:func:`_local_gather_tables`), which is how
+   ``repad_to`` / ``repad_to_blocks`` stay consistent: they recompute
+   the tables on the grown stream (bit-identical on the unchanged
+   blocks) and never shrink ``S_blk``.  :func:`resolve_gather` is the
+   one ``gather="auto"`` decision point: the segment-local path wins
+   when ``S_blk / seg_count`` is below the locality ratio.
+
 3. **Execute.**  ``kernels.ops.execute_spmm`` (Pallas or XLA, padded
-   *and* ragged) streams the packed blocks; every entry point reaches it
+   *and* ragged, resident or segment-local gather — the latter streams
+   only each block's ``S_blk`` referenced x tiles via the pack-time
+   ``seg_blk`` table instead of holding all of x in VMEM) streams the
+   packed blocks; every entry point reaches it
    through :meth:`GustPlan.spmm`/:meth:`GustPlan.spmv` — including
    sharded execution (:meth:`GustPlan.shard`: k parallel length-l GUSTs
    over window ranges balanced by block count) and
@@ -101,7 +126,10 @@ __all__ = [
     "pack_ragged",
     "pack_auto",
     "DEFAULT_WASTE_THRESHOLD",
+    "DEFAULT_LOCALITY_RATIO",
+    "DEFAULT_LOCAL_MIN_SEGS",
     "resolve_layout",
+    "resolve_gather",
     "ragged_waste_ratio",
     "packed_spec",
     "ragged_spec",
@@ -132,25 +160,39 @@ class PackedSchedule:
       row_blk: (W * C_pad, l) int32 adder index; 0 in padding slots.
       row_perm:(W * l,) int32 — original row of each scheduled row position
                (identity-extended past m).
+      seg_blk: (T_blk, S_blk) int32 — per-(c_blk, l)-block distinct column
+               segments (sorted; padded with segment 0).  T_blk =
+               W * C_pad / c_blk.
+      col_loc: (W * C_pad, l) col_blk remapped to block-local segment ids
+               (``local_seg * l + col % l``; index dtype preserved).
 
     Static (aux):
       l, num_windows, c_pad, shape=(m, n), fusable (lane structure verified
-      for the fused in-kernel gather).
+      for the fused in-kernel gather), c_blk (the block height the gather
+      tables were built for), s_blk, identity_perm (row_perm is the
+      identity — the executor skips the output scatter).
     """
 
     m_blk: jnp.ndarray
     col_blk: jnp.ndarray
     row_blk: jnp.ndarray
     row_perm: jnp.ndarray
+    seg_blk: jnp.ndarray
+    col_loc: jnp.ndarray
     l: int
     num_windows: int
     c_pad: int
     shape: Tuple[int, int]
     fusable: bool
+    c_blk: int
+    s_blk: int
+    identity_perm: bool
 
     def tree_flatten(self):
-        leaves = (self.m_blk, self.col_blk, self.row_blk, self.row_perm)
-        aux = (self.l, self.num_windows, self.c_pad, self.shape, self.fusable)
+        leaves = (self.m_blk, self.col_blk, self.row_blk, self.row_perm,
+                  self.seg_blk, self.col_loc)
+        aux = (self.l, self.num_windows, self.c_pad, self.shape, self.fusable,
+               self.c_blk, self.s_blk, self.identity_perm)
         return leaves, aux
 
     @classmethod
@@ -190,17 +232,35 @@ class PackedSchedule:
             )
             return jnp.concatenate([a3, pad], axis=1).reshape(W * c_pad, l)
 
+        col_grown = grow(self.col_blk, np.arange(l, dtype=np.int32))
+        # gather tables are a pure function of (col, l, c_blk): recomputing
+        # on the grown stream is bit-identical on the unchanged blocks, and
+        # S_blk never shrinks (all-lane padding rows reference only seg 0)
+        seg_blk, col_loc, s_blk = _local_gather_tables(
+            np.asarray(col_grown), l, self.c_blk, s_min=self.s_blk
+        )
         return PackedSchedule(
             m_blk=grow(self.m_blk, np.zeros(l, np.float32)),
-            col_blk=grow(self.col_blk, np.arange(l, dtype=np.int32)),
+            col_blk=col_grown,
             row_blk=grow(self.row_blk, np.zeros(l, np.int32)),
             row_perm=self.row_perm,
+            seg_blk=jnp.asarray(seg_blk),
+            col_loc=jnp.asarray(col_loc, self.col_loc.dtype),
             l=l,
             num_windows=W,
             c_pad=c_pad,
             shape=self.shape,
             fusable=self.fusable,
+            c_blk=self.c_blk,
+            s_blk=s_blk,
+            identity_perm=self.identity_perm,
         )
+
+    def repad_seg_to(self, s_blk: int) -> "PackedSchedule":
+        """Widen the per-block segment table to ``s_blk`` slots (padding
+        with segment 0, which no ``col_loc`` entry references).  Used to
+        equalize ``S_blk`` across stacked serving layers."""
+        return _repad_seg(self, s_blk)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -222,6 +282,10 @@ class RaggedSchedule:
       row_blk:      (T_blk * c_blk, l) int adder index; 0 in padding slots.
       row_perm:     (W * l,) int32 — original row of each scheduled row
                     position (identity-extended past m).
+      seg_blk:      (T_blk, S_blk) int32 — per-block distinct column
+                    segments (sorted; padded with segment 0).
+      col_loc:      (T_blk * c_blk, l) col_blk remapped to block-local
+                    segment ids (index dtype preserved).
       block_window: (T_blk,) int32 — window id of each stream block
                     (sorted; blocks of one window are contiguous).
       block_starts: (W + 1,) int32 — per-window block prefix: window ``w``
@@ -229,13 +293,15 @@ class RaggedSchedule:
                     (always at least one).
 
     Static (aux): l, num_windows, c_blk, num_blocks (= T_blk), shape,
-    fusable.
+    fusable, s_blk, identity_perm.
     """
 
     m_blk: jnp.ndarray
     col_blk: jnp.ndarray
     row_blk: jnp.ndarray
     row_perm: jnp.ndarray
+    seg_blk: jnp.ndarray
+    col_loc: jnp.ndarray
     block_window: jnp.ndarray
     block_starts: jnp.ndarray
     l: int
@@ -244,12 +310,15 @@ class RaggedSchedule:
     num_blocks: int
     shape: Tuple[int, int]
     fusable: bool
+    s_blk: int
+    identity_perm: bool
 
     def tree_flatten(self):
         leaves = (self.m_blk, self.col_blk, self.row_blk, self.row_perm,
+                  self.seg_blk, self.col_loc,
                   self.block_window, self.block_starts)
         aux = (self.l, self.num_windows, self.c_blk, self.num_blocks,
-               self.shape, self.fusable)
+               self.shape, self.fusable, self.s_blk, self.identity_perm)
         return leaves, aux
 
     @classmethod
@@ -305,11 +374,20 @@ class RaggedSchedule:
             jnp.full((extra,), last_w, self.block_window.dtype),
         ])
         bs = jnp.asarray(self.block_starts).at[-1].set(num_blocks)
+        col_grown = grow(self.col_blk, lane)
+        # recompute the gather tables on the grown stream (pure function of
+        # the column content — bit-identical on the unchanged blocks; the
+        # appended all-lane blocks reference only segment 0)
+        seg_blk, col_loc, s_blk = _local_gather_tables(
+            np.asarray(col_grown), l, self.c_blk, s_min=self.s_blk
+        )
         return RaggedSchedule(
             m_blk=grow(self.m_blk, np.zeros(l, np.float32)),
-            col_blk=grow(self.col_blk, lane),
+            col_blk=col_grown,
             row_blk=grow(self.row_blk, np.zeros(l, np.int32)),
             row_perm=self.row_perm,
+            seg_blk=jnp.asarray(seg_blk),
+            col_loc=jnp.asarray(col_loc, self.col_loc.dtype),
             block_window=bw,
             block_starts=bs,
             l=l,
@@ -318,7 +396,34 @@ class RaggedSchedule:
             num_blocks=num_blocks,
             shape=self.shape,
             fusable=self.fusable,
+            s_blk=s_blk,
+            identity_perm=self.identity_perm,
         )
+
+    def repad_seg_to(self, s_blk: int) -> "RaggedSchedule":
+        """Widen the per-block segment table to ``s_blk`` slots (padding
+        with segment 0).  The ragged twin of
+        :meth:`PackedSchedule.repad_seg_to`."""
+        return _repad_seg(self, s_blk)
+
+
+def _repad_seg(packed, s_blk: int):
+    """Shared ``repad_seg_to``: pad ``seg_blk`` columns with segment 0 —
+    no ``col_loc`` entry maps to the new slots, so the gathered-but-unused
+    tiles contribute nothing (the local kernels mask by local id)."""
+    if s_blk == packed.s_blk:
+        return packed
+    if s_blk < packed.s_blk:
+        raise ValueError(
+            f"cannot shrink s_blk {packed.s_blk} -> {s_blk} (real segment "
+            "ids may live in the dropped table slots)"
+        )
+    seg = jnp.asarray(packed.seg_blk)
+    seg = jnp.concatenate(
+        [seg, jnp.zeros((seg.shape[0], s_blk - packed.s_blk), seg.dtype)],
+        axis=1,
+    )
+    return dataclasses.replace(packed, seg_blk=seg, s_blk=s_blk)
 
 
 def window_ids(sched: GustSchedule) -> np.ndarray:
@@ -379,6 +484,53 @@ def _fusable(sched: GustSchedule) -> bool:
     return bool(np.all((off == lane[None, :]) | (off == (l - 1 - lane)[None, :])))
 
 
+def _local_gather_tables(
+    col: np.ndarray, l: int, c_blk: int, s_min: int = 1
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Segment-local gather tables of a packed column stream.
+
+    For each ``(c_blk, l)`` block of ``col`` (shape ``(rows, l)``), the
+    distinct column segments (``col // l``) it references, sorted
+    ascending, padded with segment 0 to the common width
+    ``S_blk = max(max distinct per block, s_min)`` — plus the columns
+    remapped to block-local segment ids:
+    ``col_loc = local_seg * l + col % l``.
+
+    A pure function of ``(col, l, c_blk)``: recomputing on a grown stream
+    reproduces the original blocks' tables bitwise, which is what makes
+    ``repad_to`` / ``repad_to_blocks`` safe.  Lane-valued padding columns
+    live in segment 0, which sorts first, so padding slots always map to
+    local slot 0 and ``col_loc`` padding rows equal the lane index.
+    Returns ``(seg_blk (T, S_blk) int32, col_loc (rows, l) int32, S_blk)``.
+    """
+    col = np.asarray(col, np.int64)
+    rows = col.shape[0]
+    if rows % c_blk:  # virtually pad to a block multiple with lane rows
+        lane_rows = np.broadcast_to(
+            np.arange(l, dtype=np.int64), (c_blk - rows % c_blk, l)
+        )
+        col = np.concatenate([col, lane_rows], axis=0)
+    t_blk = col.shape[0] // c_blk
+    segs = (col // l).reshape(t_blk, c_blk * l)
+    order = np.argsort(segs, axis=1, kind="stable")
+    srt = np.take_along_axis(segs, order, axis=1)
+    first = np.ones_like(srt, dtype=bool)
+    if srt.shape[1] > 1:
+        first[:, 1:] = srt[:, 1:] != srt[:, :-1]
+    loc_sorted = np.cumsum(first, axis=1) - 1  # local id per sorted slot
+    loc = np.empty_like(loc_sorted)
+    np.put_along_axis(loc, order, loc_sorted, axis=1)
+    counts = first.sum(axis=1)
+    s_blk = int(max(counts.max() if t_blk else 1, s_min, 1))
+    seg_blk = np.zeros((t_blk, s_blk), np.int32)
+    r_idx = np.nonzero(first)[0]
+    seg_blk[r_idx, loc_sorted[first]] = srt[first]
+    col_loc = (
+        loc.reshape(col.shape[0], l) * l + (col - (col // l) * l)
+    ).astype(np.int32)[:rows]
+    return seg_blk, col_loc, s_blk
+
+
 def _extended_row_perm(sched: GustSchedule) -> np.ndarray:
     """row_perm identity-extended to the full W*l scheduled row positions
     (shared by both fixed-shape layouts)."""
@@ -401,17 +553,25 @@ def pack_schedule(
     m, n = sched.shape
     m_b, c_b, r_b, c_pad, fusable = pack_blocks(sched, c_blk)
     row_perm = _extended_row_perm(sched)
+    seg_blk, col_loc, s_blk = _local_gather_tables(c_b, l, c_blk)
 
     return PackedSchedule(
         m_blk=jnp.asarray(m_b, value_dtype),
         col_blk=jnp.asarray(c_b, index_dtype),
         row_blk=jnp.asarray(r_b, index_dtype),
         row_perm=jnp.asarray(row_perm),
+        seg_blk=jnp.asarray(seg_blk),
+        col_loc=jnp.asarray(col_loc, index_dtype),
         l=l,
         num_windows=W,
         c_pad=c_pad,
         shape=(m, n),
         fusable=fusable,
+        c_blk=c_blk,
+        s_blk=s_blk,
+        identity_perm=bool(
+            np.array_equal(row_perm, np.arange(W * l, dtype=np.int32))
+        ),
     )
 
 
@@ -480,12 +640,16 @@ def pack_ragged(
         c_b[dest] = sched.col_sch[:c_total]
 
     block_window = np.repeat(np.arange(W, dtype=np.int32), bpw)
+    row_perm = _extended_row_perm(sched)
+    seg_blk, col_loc, s_blk = _local_gather_tables(c_b, l, c_blk)
 
     return RaggedSchedule(
         m_blk=jnp.asarray(m_b, value_dtype),
         col_blk=jnp.asarray(c_b, index_dtype),
         row_blk=jnp.asarray(r_b, index_dtype),
-        row_perm=jnp.asarray(_extended_row_perm(sched)),
+        row_perm=jnp.asarray(row_perm),
+        seg_blk=jnp.asarray(seg_blk),
+        col_loc=jnp.asarray(col_loc, index_dtype),
         block_window=jnp.asarray(block_window),
         block_starts=jnp.asarray(block_starts, jnp.int32),
         l=l,
@@ -494,6 +658,10 @@ def pack_ragged(
         num_blocks=t_blk,
         shape=(m, n),
         fusable=_fusable(sched),
+        s_blk=s_blk,
+        identity_perm=bool(
+            np.array_equal(row_perm, np.arange(W * l, dtype=np.int32))
+        ),
     )
 
 
@@ -522,6 +690,43 @@ def resolve_layout(
     )
 
 
+#: ``S_blk / seg_count`` ratio below which ``gather="auto"`` picks the
+#: segment-local path — consumed only through :func:`resolve_gather`, the
+#: one gather-mode decision point (the locality twin of
+#: :data:`DEFAULT_WASTE_THRESHOLD`).
+DEFAULT_LOCALITY_RATIO = 0.5
+
+#: Minimum segment count before ``gather="auto"`` considers the local
+#: path at all: below this width the resident contraction is small enough
+#: that the local mode's extra per-block grid steps (S_blk tile loads,
+#: scratch init/flush) dominate the FLOP saving — measured crossover in
+#: ``BENCH_gather.json`` (0.64x at 32 segments, >=1.6x from 128 up).
+DEFAULT_LOCAL_MIN_SEGS = 128
+
+
+def resolve_gather(
+    s_blk: int, seg_count: int, locality_ratio: float = None,
+    min_segs: int = None,
+) -> str:
+    """The one ``gather="auto"`` decision point: ``"local"`` when the
+    matrix is wide enough for tile streaming to pay for its grid-step
+    overhead (``seg_count >= min_segs``) AND the per-block segment
+    working set is small relative to the width (``S_blk <=
+    locality_ratio * seg_count`` — the regime where streaming only the
+    referenced x tiles beats holding all of x resident in VMEM and
+    contracting over every segment); else ``"resident"``.  ``None``
+    thresholds mean :data:`DEFAULT_LOCALITY_RATIO` /
+    :data:`DEFAULT_LOCAL_MIN_SEGS`.  Every auto caller —
+    ``kernels.ops.execute_spmm``, ``GustPlan`` — delegates here."""
+    if locality_ratio is None:
+        locality_ratio = DEFAULT_LOCALITY_RATIO
+    if min_segs is None:
+        min_segs = DEFAULT_LOCAL_MIN_SEGS
+    if seg_count < max(min_segs, 2):
+        return "resident"
+    return "local" if s_blk <= locality_ratio * seg_count else "resident"
+
+
 def pack_auto(
     sched: GustSchedule, c_blk: int = 8, *, waste_threshold: float = None,
     value_dtype=jnp.float32, index_dtype=jnp.int32,
@@ -536,6 +741,13 @@ def pack_auto(
     return fn(sched, c_blk, value_dtype=value_dtype, index_dtype=index_dtype)
 
 
+def _default_spec_s_blk(n: int, l: int, c_blk: int) -> int:
+    """Worst-case table width for shape-only specs: a block of c_blk*l
+    slots can reference at most that many distinct segments, capped at the
+    matrix's segment count."""
+    return max(min(-(-n // l), c_blk * l), 1)
+
+
 def packed_spec(
     m: int,
     n: int,
@@ -543,22 +755,33 @@ def packed_spec(
     c_pad: int,
     value_dtype=jnp.float32,
     index_dtype=jnp.int32,
+    c_blk: int = 8,
+    s_blk: int = None,
 ) -> PackedSchedule:
     """ShapeDtypeStruct stand-in for a PackedSchedule — used by the dry-run
     (no allocation).  ``c_pad`` is typically sized from the Eq. 9 bound:
-    ``expected_colors_bound(n, density, l)`` rounded up."""
+    ``expected_colors_bound(n, density, l)`` rounded up.  ``s_blk=None``
+    sizes the gather table at the worst case (no locality assumed)."""
     W = max(-(-m // l), 1)
+    if s_blk is None:
+        s_blk = _default_spec_s_blk(n, l, c_blk)
+    t_blk = -(-(W * c_pad) // c_blk)
     sds = jax.ShapeDtypeStruct
     return PackedSchedule(
         m_blk=sds((W * c_pad, l), value_dtype),
         col_blk=sds((W * c_pad, l), index_dtype),
         row_blk=sds((W * c_pad, l), index_dtype),
         row_perm=sds((W * l,), jnp.int32),
+        seg_blk=sds((t_blk, s_blk), jnp.int32),
+        col_loc=sds((W * c_pad, l), index_dtype),
         l=l,
         num_windows=W,
         c_pad=c_pad,
         shape=(m, n),
         fusable=True,
+        c_blk=c_blk,
+        s_blk=s_blk,
+        identity_perm=False,
     )
 
 
@@ -570,17 +793,22 @@ def ragged_spec(
     c_blk: int = 8,
     value_dtype=jnp.float32,
     index_dtype=jnp.int32,
+    s_blk: int = None,
 ) -> RaggedSchedule:
     """ShapeDtypeStruct stand-in for a RaggedSchedule — the ragged twin of
     :func:`packed_spec` for dry-runs.  ``num_blocks`` is typically sized
     from the Eq. 9 bound: ``W * ceil(expected_colors_bound / c_blk)``."""
     W = max(-(-m // l), 1)
+    if s_blk is None:
+        s_blk = _default_spec_s_blk(n, l, c_blk)
     sds = jax.ShapeDtypeStruct
     return RaggedSchedule(
         m_blk=sds((num_blocks * c_blk, l), value_dtype),
         col_blk=sds((num_blocks * c_blk, l), index_dtype),
         row_blk=sds((num_blocks * c_blk, l), index_dtype),
         row_perm=sds((W * l,), jnp.int32),
+        seg_blk=sds((num_blocks, s_blk), jnp.int32),
+        col_loc=sds((num_blocks * c_blk, l), index_dtype),
         block_window=sds((num_blocks,), jnp.int32),
         block_starts=sds((W + 1,), jnp.int32),
         l=l,
@@ -589,6 +817,8 @@ def ragged_spec(
         num_blocks=num_blocks,
         shape=(m, n),
         fusable=True,
+        s_blk=s_blk,
+        identity_perm=False,
     )
 
 
@@ -604,23 +834,30 @@ def packed_leaves(p: PackedSchedule) -> Dict:
         "col_blk": p.col_blk,
         "row_blk": p.row_blk,
         "row_perm": p.row_perm,
+        "seg_blk": p.seg_blk,
+        "col_loc": p.col_loc,
     }
 
 
 def packed_meta(p: PackedSchedule) -> Tuple:
-    """Static (non-array) part: ``(l, num_windows, c_pad, shape, fusable)``."""
-    return (p.l, p.num_windows, p.c_pad, p.shape, p.fusable)
+    """Static (non-array) part: ``(l, num_windows, c_pad, shape, fusable,
+    c_blk, s_blk, identity_perm)``."""
+    return (p.l, p.num_windows, p.c_pad, p.shape, p.fusable, p.c_blk,
+            p.s_blk, p.identity_perm)
 
 
 def packed_from_leaves(leaves: Dict, meta: Tuple) -> PackedSchedule:
     """Inverse of the codec: rebuild a PackedSchedule from leaves + meta."""
-    l, w, c_pad, shape, fusable = meta
+    l, w, c_pad, shape, fusable, c_blk, s_blk, identity_perm = meta
     return PackedSchedule(
         m_blk=leaves["m_blk"],
         col_blk=leaves["col_blk"],
         row_blk=leaves["row_blk"],
         row_perm=leaves["row_perm"],
+        seg_blk=leaves["seg_blk"],
+        col_loc=leaves["col_loc"],
         l=l, num_windows=w, c_pad=c_pad, shape=shape, fusable=fusable,
+        c_blk=c_blk, s_blk=s_blk, identity_perm=identity_perm,
     )
 
 
@@ -631,6 +868,8 @@ def ragged_leaves(r: RaggedSchedule) -> Dict:
         "col_blk": r.col_blk,
         "row_blk": r.row_blk,
         "row_perm": r.row_perm,
+        "seg_blk": r.seg_blk,
+        "col_loc": r.col_loc,
         "block_window": r.block_window,
         "block_starts": r.block_starts,
     }
@@ -638,15 +877,15 @@ def ragged_leaves(r: RaggedSchedule) -> Dict:
 
 def ragged_meta(r: RaggedSchedule) -> Tuple:
     """Static part: ``("ragged", l, num_windows, c_blk, num_blocks, shape,
-    fusable)``.  The leading tag disambiguates from :func:`packed_meta`
-    tuples in serialized serving stacks."""
+    fusable, s_blk, identity_perm)``.  The leading tag disambiguates from
+    :func:`packed_meta` tuples in serialized serving stacks."""
     return ("ragged", r.l, r.num_windows, r.c_blk, r.num_blocks, r.shape,
-            r.fusable)
+            r.fusable, r.s_blk, r.identity_perm)
 
 
 def ragged_from_leaves(leaves: Dict, meta: Tuple) -> RaggedSchedule:
     """Inverse of the ragged codec."""
-    tag, l, w, c_blk, t_blk, shape, fusable = meta
+    tag, l, w, c_blk, t_blk, shape, fusable, s_blk, identity_perm = meta
     if tag != "ragged":
         raise ValueError(f"not a ragged meta tuple: {meta!r}")
     return RaggedSchedule(
@@ -654,10 +893,12 @@ def ragged_from_leaves(leaves: Dict, meta: Tuple) -> RaggedSchedule:
         col_blk=leaves["col_blk"],
         row_blk=leaves["row_blk"],
         row_perm=leaves["row_perm"],
+        seg_blk=leaves["seg_blk"],
+        col_loc=leaves["col_loc"],
         block_window=leaves["block_window"],
         block_starts=leaves["block_starts"],
         l=l, num_windows=w, c_blk=c_blk, num_blocks=t_blk, shape=shape,
-        fusable=fusable,
+        fusable=fusable, s_blk=s_blk, identity_perm=identity_perm,
     )
 
 

@@ -54,6 +54,7 @@ from .packing import (
     default_cache,
     pack_ragged,
     pack_schedule,
+    resolve_gather,
     packed_from_leaves,
     packed_leaves,
     packed_meta,
@@ -71,6 +72,7 @@ __all__ = ["PlanConfig", "PlanCost", "GustPlan", "plan"]
 _LAYOUTS = ("padded", "ragged", "auto")
 _BACKENDS = ("jnp", "pallas", "auto")
 _COLORERS = ("paper", "fast", "exact")
+_GATHERS = ("resident", "local", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +90,13 @@ class PlanConfig:
       layout:          ``padded`` | ``ragged`` | ``auto`` (measured waste).
       backend:         ``jnp`` | ``pallas`` | ``auto`` (Pallas on TPU when
                        the schedule is fusable).
+      gather:          Buffer-Filler mode — ``resident`` (x whole in
+                       VMEM, one-hot over every column segment),
+                       ``local`` (stream only the ``S_blk`` x tiles each
+                       block references via the pack-time segment table),
+                       or ``auto`` (segment-local when the measured
+                       ``S_blk / seg_count`` locality ratio is low —
+                       :func:`~repro.core.packing.resolve_gather`).
       waste_threshold: padded/ragged stream ratio above which ``auto``
                        picks ragged; ``None`` = the shared default.
       value_dtype:     dtype name of the value leaves (``float32`` |
@@ -104,6 +113,7 @@ class PlanConfig:
     c_blk: int = 8
     layout: str = "auto"
     backend: str = "auto"
+    gather: str = "auto"
     waste_threshold: Optional[float] = None
     value_dtype: str = "float32"
     index_dtype: str = "int32"
@@ -124,6 +134,10 @@ class PlanConfig:
         if self.colorer not in _COLORERS:
             raise ValueError(
                 f"colorer must be one of {_COLORERS}, got {self.colorer!r}"
+            )
+        if self.gather not in _GATHERS:
+            raise ValueError(
+                f"gather must be one of {_GATHERS}, got {self.gather!r}"
             )
         # normalize dtypes to canonical names so configs hash/compare/
         # serialize stably whether built from strings or jnp dtypes
@@ -156,6 +170,22 @@ class PlanCost:
     own evaluation path); ``waste_ratio`` is the measured padded/ragged
     stream ratio that drives the ``auto`` layout choice; ``expected_*``
     are the Eq. 9-11 statistical bounds at the matrix's measured density.
+
+    The gather-locality block (PR 5) quantifies both Buffer-Filler modes
+    without executing — this is what ``dryrun``/``roofline_report`` read
+    to show the segment-local win:
+
+    * ``s_blk`` / ``locality_ratio`` — measured per-block segment working
+      set and its ratio to ``seg_count`` (the ``gather="auto"`` signal);
+    * ``gather_flops_resident`` / ``gather_flops_local`` — fused-gather
+      FLOPs per vector column: ``4 · slots · seg_count`` vs
+      ``4 · slots · S_blk`` (two one-hot contractions, 2 flops/MAC);
+    * ``x_vmem_bytes_resident`` / ``x_vmem_bytes_local`` — f32 x-tile
+      VMEM residency per vector column: the whole padded vector
+      (``seg_count · l · 4``) vs one block's tile working set
+      (``S_blk · l · 4``) — the resident number is the width cap the
+      local mode removes;
+    * ``gather`` — the mode this plan resolves to.
     """
 
     cycles: int
@@ -168,6 +198,13 @@ class PlanCost:
     expected_colors: float
     expected_cycles: float
     expected_utilization: float
+    gather: str
+    s_blk: int
+    locality_ratio: float
+    gather_flops_resident: int
+    gather_flops_local: int
+    x_vmem_bytes_resident: int
+    x_vmem_bytes_local: int
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -289,6 +326,16 @@ class GustPlan:
             self._artifact = self._pack()
         return self._artifact
 
+    @property
+    def gather_mode(self) -> str:
+        """Resolved Buffer-Filler gather mode (``auto`` is decided from
+        the packed artifact's measured ``S_blk / seg_count`` locality —
+        reading this packs a lazy plan)."""
+        if self.config.gather != "auto":
+            return self.config.gather
+        a = self.artifact
+        return resolve_gather(a.s_blk, a.seg_count)
+
     def _pack(self):
         c = self.config
         layout = self.layout  # resolves "auto" from the measured waste
@@ -343,6 +390,7 @@ class GustPlan:
             interpret=self._interpret(),
             c_blk=self.config.c_blk,
             transpose_io=transpose_io,
+            gather=self.config.gather,
         )
 
     def spmv(self, v: jnp.ndarray) -> jnp.ndarray:
@@ -445,10 +493,24 @@ class GustPlan:
         if ragged:
             t_uniform = max(a.num_blocks for a in arts)
             arts = [a.repad_to_blocks(t_uniform) for a in arts]
-            leaf_fn, meta = ragged_leaves, ragged_meta(arts[0])
         else:
             c_uniform = max(a.c_pad for a in arts)
             arts = [a.repad_to(c_uniform) for a in arts]
+        # equalize the gather-table width too (seg_blk must stack), and
+        # make the shared static flags conservative: one meta tuple
+        # describes every layer's slice, so identity_perm/fusable hold
+        # only if they hold for ALL layers
+        s_uniform = max(a.s_blk for a in arts)
+        arts = [a.repad_seg_to(s_uniform) for a in arts]
+        ident = all(a.identity_perm for a in arts)
+        fusable = all(a.fusable for a in arts)
+        arts = [
+            dataclasses.replace(a, identity_perm=ident, fusable=fusable)
+            for a in arts
+        ]
+        if ragged:
+            leaf_fn, meta = ragged_leaves, ragged_meta(arts[0])
+        else:
             leaf_fn, meta = packed_leaves, packed_meta(arts[0])
         leaves = jax.tree.map(
             lambda *xs: jnp.stack(xs), *[leaf_fn(a) for a in arts]
@@ -543,7 +605,7 @@ class GustPlan:
             )
         else:
             artifact = packed_spec(
-                m, n, c.l, cpb * c.c_blk,
+                m, n, c.l, cpb * c.c_blk, c_blk=c.c_blk,
                 value_dtype=c.value_jnp, index_dtype=c.index_jnp,
             )
         return cls(
@@ -584,6 +646,13 @@ class GustPlan:
             expected_colors=float(expected_colors_bound(n, density, self.l)),
             expected_cycles=float(expected_execution_cycles(n, density, self.l)),
             expected_utilization=float(expected_utilization(n, density, self.l)),
+            gather=self.gather_mode,
+            s_blk=a.s_blk,
+            locality_ratio=a.s_blk / max(a.seg_count, 1),
+            gather_flops_resident=4 * streamed * a.seg_count,
+            gather_flops_local=4 * streamed * a.s_blk,
+            x_vmem_bytes_resident=a.seg_count * self.l * 4,
+            x_vmem_bytes_local=a.s_blk * self.l * 4,
         )
 
     def __repr__(self) -> str:

@@ -30,10 +30,10 @@ from jax.experimental import pallas as pl
 __all__ = ["make_gather_fill"]
 
 
-def _kernel(col_ref, xs_ref, xf_ref, out_ref, *, l, seg_count, c_blk, b):
+def _kernel(col_ref, xs_ref, out_ref, *, l, seg_count, c_blk, b):
     col_blk = col_ref[...].astype(jnp.int32)  # (C_blk, l) int
     xs = xs_ref[...].astype(jnp.float32)  # (S, l, B)
-    xf = xf_ref[...].astype(jnp.float32)  # (S, l, B)
+    xf = xs[:, ::-1, :]  # lane-reversed layout, derived in-kernel
 
     seg = col_blk // l
     off = col_blk - seg * l
@@ -75,7 +75,6 @@ def make_gather_fill(
         grid=grid,
         in_specs=[
             pl.BlockSpec((c_blk, l), lambda i: (i, 0)),
-            pl.BlockSpec((seg_count, l, b), lambda i: (0, 0, 0)),
             pl.BlockSpec((seg_count, l, b), lambda i: (0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((c_blk, l, b), lambda i: (i, 0, 0)),

@@ -4,13 +4,28 @@ TPU adaptation of the paper's three hardware levels (DESIGN.md §2):
 
   multipliers  -> VPU elementwise multiply of the scheduled value block
                   with the gathered vector block;
-  Buffer Filler-> the vector lives resident in VMEM; the per-slot gather
-                  ``v[Col_sch]`` is fused in-kernel as a *segment one-hot
-                  contraction* (the scheduler only ever assigns a column to
-                  its own lane or the lane-reversed position — load-balance
-                  step 3 — so a one-hot over the ``n/l`` column segments
-                  plus a straight/flipped select reconstructs the gather
-                  without random access);
+  Buffer Filler-> two execution modes for the per-slot gather
+                  ``v[Col_sch]``, both fused in-kernel (the scheduler
+                  only ever assigns a column to its own lane or the
+                  lane-reversed position — load-balance step 3 — so the
+                  gather is a segment one-hot / segment-select plus a
+                  straight/flipped select, never random access):
+
+                  * **resident** (``make_gust_spmv``): the vector lives
+                    whole in VMEM and each block contracts a one-hot
+                    over all ``seg_count = ceil(n/l)`` column segments —
+                    O(seg_count) gather work per slot, O(n) VMEM;
+                  * **segment-local** (``make_gust_spmv_local``): the
+                    pack-time ``seg_blk`` table (scalar-prefetched)
+                    steers the pipeline to stream only the ``S_blk``
+                    x tiles a block actually references — one (1, l, B)
+                    tile per inner grid step — and the contraction
+                    shrinks to the block-local segments: O(S_blk) gather
+                    work per slot, O(l·B) VMEM.  This is the paper's
+                    Buffer-Filler locality story (touch only the vector
+                    entries a window needs) and removes the
+                    VMEM-residency cap on matrix *width*.
+
   crossbar +   -> a one-hot routing matmul on the MXU:
   adders          ``y_win += OneHot(Row_sch_blk)^T @ P_flat``.
                   Collision-freedom of the edge coloring is what makes this
@@ -18,16 +33,17 @@ TPU adaptation of the paper's three hardware levels (DESIGN.md §2):
                   most one partial product, so the one-hot rows never
                   overlap within a cycle and the matmul loses nothing.
 
-Grid: ``(num_windows, num_color_blocks)``; dimension 1 is a reduction —
-the output window tile initializes at the first color block and
-accumulates across the rest, which is the Pallas analogue of the adders'
-integrate-then-dump (the "dump signal" is the final grid step).
+Grid: resident ``(num_windows, num_color_blocks)``; segment-local adds an
+inner ``S_blk`` dimension that walks the block's x tiles.  Dimension 1
+(and 2) are reductions — the output window tile initializes at the first
+color block and accumulates across the rest, the Pallas analogue of the
+adders' integrate-then-dump (the "dump signal" is the final grid step).
 
 The scheduled stream (``m/col/row`` blocks) is what flows HBM->VMEM, tile
 by tile, double-buffered by the Pallas pipeline — exactly the paper's
-two-step Buffer Filler pipeline.  The dense vector/activation ``x`` is
-resident in VMEM for the whole call (the paper: "GUST stores the whole
-input vector as the first step").
+two-step Buffer Filler pipeline.  The lane-reversed x layout is derived
+*in-kernel* from the straight layout (``xs[:, ::-1, :]`` on the VMEM
+tile), so only one copy of x ever crosses HBM->VMEM.
 
 All arithmetic accumulates in f32 regardless of input dtype (MXU-native).
 """
@@ -39,20 +55,47 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["make_gust_spmv", "block_accumulate"]
+__all__ = [
+    "make_gust_spmv",
+    "make_gust_spmv_local",
+    "block_accumulate",
+    "route_rows",
+]
 
 
-def block_accumulate(m_ref, col_ref, row_ref, xs_ref, xf_ref, *, l, seg_count,
+def route_rows(partial, row_blk, *, c_blk, l, b):
+    """Crossbar + adders: one-hot routing matmul on the MXU.  ``partial``
+    is the (l, C_blk, B) multiplied block; returns its (1, l, B)
+    contribution to the window accumulator.  Padding slots carry m==0 and
+    row==0, contributing exactly zero."""
+    p_flat = partial.transpose(1, 0, 2).reshape(c_blk * l, b)
+    row_flat = row_blk.reshape(c_blk * l)
+    onehot_row = (
+        row_flat[:, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (c_blk * l, l), 1)
+    ).astype(jnp.float32)
+    # (l, B) = (C_blk*l, l)^T @ (C_blk*l, B)
+    return jax.lax.dot_general(
+        onehot_row,
+        p_flat,
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[None]  # (1, l, B)
+
+
+def block_accumulate(m_ref, col_ref, row_ref, xs_ref, *, l, seg_count,
                      c_blk, b):
-    """Shared per-block math of the padded and ragged kernels: fused
-    Buffer-Filler gather + VPU multiply + one-hot routing matmul.  Returns
-    the block's (1, l, B) contribution to its window accumulator."""
+    """Shared per-block math of the padded and ragged *resident* kernels:
+    fused Buffer-Filler gather + VPU multiply + one-hot routing matmul.
+    The lane-reversed x layout is derived in-kernel.  Returns the block's
+    (1, l, B) contribution to its window accumulator."""
     m_blk = m_ref[...].astype(jnp.float32)  # (C_blk, l)
     col_blk = col_ref[...].astype(jnp.int32)  # (C_blk, l) int
     row_blk = row_ref[...].astype(jnp.int32)  # (C_blk, l) int
     xs = xs_ref[...].astype(jnp.float32)  # (S, l, B) straight layout
-    xf = xf_ref[...].astype(jnp.float32)  # (S, l, B) lane-reversed layout
+    xf = xs[:, ::-1, :]  # (S, l, B) lane-reversed, derived in-kernel
 
     # ---- Buffer Filler: fused vector gather -----------------------------
     seg = col_blk // l  # (C_blk, l)
@@ -80,27 +123,37 @@ def block_accumulate(m_ref, col_ref, row_ref, xs_ref, xf_ref, *, l, seg_count,
     # ---- multipliers (VPU) ----------------------------------------------
     partial = m_blk.T[:, :, None] * x_sel  # (l, C_blk, B)
 
-    # ---- crossbar + adders: one-hot routing matmul (MXU) ------------------
-    p_flat = partial.transpose(1, 0, 2).reshape(c_blk * l, b)
-    row_flat = row_blk.reshape(c_blk * l)
-    onehot_row = (
-        row_flat[:, None]
-        == jax.lax.broadcasted_iota(jnp.int32, (c_blk * l, l), 1)
-    ).astype(jnp.float32)
-    # (l, B) = (C_blk*l, l)^T @ (C_blk*l, B); padding slots carry m==0 and
-    # row==0, contributing exactly zero.
-    return jax.lax.dot_general(
-        onehot_row,
-        p_flat,
-        (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )[None]  # (1, l, B)
+    # ---- crossbar + adders ----------------------------------------------
+    return route_rows(partial, row_blk, c_blk=c_blk, l=l, b=b)
 
 
-def _kernel(m_ref, col_ref, row_ref, xs_ref, xf_ref, y_ref, *, l, seg_count, c_blk, b):
+def gather_local_step(col_ref, xt_ref, s, g_scr, *, l, c_blk):
+    """One segment-local gather step, shared by the padded and ragged
+    local kernels: accumulate into the (l, C_blk, B) scratch the
+    contribution of the single streamed x tile ``xt_ref`` (the block's
+    ``s``-th referenced segment).  ``col_ref`` holds the *block-local*
+    columns (``col_loc``): a slot contributes exactly when its local
+    segment id equals ``s``, so after ``S_blk`` steps the scratch equals
+    the resident kernel's ``x_sel`` bitwise (each slot's value is added
+    once, zeros otherwise)."""
+    col_loc = col_ref[...].astype(jnp.int32)  # (C_blk, l)
+    local_seg = col_loc // l
+    off = col_loc - local_seg * l
+    lane = jax.lax.broadcasted_iota(jnp.int32, (c_blk, l), 1)
+    flip = (off != lane).astype(jnp.float32)
+    tile = xt_ref[...].astype(jnp.float32)[0]  # (l, B) straight
+    tile_rev = tile[::-1, :]  # lane-reversed, derived in-kernel
+    fsel = flip.T[:, :, None]  # (l, C_blk, 1)
+    sel = tile[:, None, :] * (1.0 - fsel) + tile_rev[:, None, :] * fsel
+    mask = (local_seg == s).astype(jnp.float32)  # (C_blk, l)
+    g_scr[...] += mask.T[:, :, None] * sel  # (l, C_blk, B)
+
+
+def _kernel(m_ref, col_ref, row_ref, xs_ref, y_ref, *, l, seg_count, c_blk,
+            b):
     cb = pl.program_id(1)
     acc = block_accumulate(
-        m_ref, col_ref, row_ref, xs_ref, xf_ref,
+        m_ref, col_ref, row_ref, xs_ref,
         l=l, seg_count=seg_count, c_blk=c_blk, b=b,
     )
 
@@ -124,7 +177,8 @@ def make_gust_spmv(
     c_blk: int = 8,
     interpret: bool = True,
 ):
-    """Build the pallas_call for a fixed packed-schedule geometry.
+    """Build the resident-gather pallas_call for a fixed packed-schedule
+    geometry.
 
     Memoized on geometry (all args are hashable scalars): ``gust_spmm``
     calls this on every trace, and direct callers (tests, the unfused
@@ -134,7 +188,8 @@ def make_gust_spmv(
     BlockSpecs:
       * schedule stream (m/col/row): HBM -> VMEM tiles of (c_blk, l), one
         per grid step — the Buffer Filler pipeline;
-      * x (straight + flipped): full-array VMEM residency;
+      * x (straight only; the flip is derived in-kernel): full-array VMEM
+        residency;
       * y: one (1, l, B) accumulator tile per window, revisited across the
         color-block (reduction) grid dimension.
     """
@@ -155,8 +210,97 @@ def make_gust_spmv(
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[sched_spec, sched_spec, sched_spec, x_spec, x_spec],
+        in_specs=[sched_spec, sched_spec, sched_spec, x_spec],
         out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((num_windows, l, b), jnp.float32),
+        interpret=interpret,
+    )
+
+
+def _local_kernel(seg_ref, m_ref, col_ref, row_ref, xt_ref, y_ref, g_scr,
+                  *, l, s_blk, c_blk, b):
+    cb, s = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _zero():
+        g_scr[...] = jnp.zeros_like(g_scr)
+
+    gather_local_step(col_ref, xt_ref, s, g_scr, l=l, c_blk=c_blk)
+
+    @pl.when(s == s_blk - 1)
+    def _flush():
+        m_blk = m_ref[...].astype(jnp.float32)  # (C_blk, l)
+        partial = m_blk.T[:, :, None] * g_scr[...]  # (l, C_blk, B)
+        acc = route_rows(
+            partial, row_ref[...].astype(jnp.int32),
+            c_blk=c_blk, l=l, b=b,
+        )
+
+        @pl.when(cb == 0)
+        def _init():
+            y_ref[...] = acc
+
+        @pl.when(cb != 0)
+        def _accum():
+            y_ref[...] += acc
+
+
+@functools.lru_cache(maxsize=256)
+def make_gust_spmv_local(
+    num_windows: int,
+    c_pad: int,
+    l: int,
+    s_blk: int,
+    b: int,
+    *,
+    c_blk: int = 8,
+    interpret: bool = True,
+):
+    """Build the segment-local pallas_call for a padded-schedule geometry.
+
+    Call signature of the returned function:
+    ``fn(seg_flat, m_blk, col_loc, row_blk, xs)`` where ``seg_flat`` is
+    the pack-time segment table flattened to ``(T_blk * S_blk,)`` int32
+    (scalar-prefetched: it steers the x-tile pipeline before each body
+    runs), ``col_loc`` holds the block-local columns, and ``xs`` is the
+    straight-layout x ``(seg_count, l, B)`` — which stays in HBM-sized
+    memory; only one (1, l, B) tile is in VMEM per grid step.
+
+    Grid ``(num_windows, c_pad/c_blk, S_blk)``: the inner dimension walks
+    the ``S_blk`` x tiles the block references (``seg_flat[t*S_blk+s]``),
+    accumulating the gathered block in VMEM scratch; the multiply +
+    routing matmul fire on the last tile.  Gather work per block is
+    O(S_blk · C_blk · l) instead of the resident kernel's
+    O(seg_count · C_blk · l), and x VMEM residency is one tile instead of
+    the whole vector — the wide-matrix fast path.
+    """
+    if c_pad % c_blk:
+        raise ValueError("c_pad must be a multiple of c_blk")
+    num_cb = c_pad // c_blk
+    grid = (num_windows, num_cb, s_blk)
+
+    sched_spec = pl.BlockSpec(
+        (c_blk, l), lambda w, cb, s, seg: (w * num_cb + cb, 0)
+    )
+    x_spec = pl.BlockSpec(
+        (1, l, b),
+        lambda w, cb, s, seg: (seg[(w * num_cb + cb) * s_blk + s], 0, 0),
+    )
+    out_spec = pl.BlockSpec((1, l, b), lambda w, cb, s, seg: (w, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[sched_spec, sched_spec, sched_spec, x_spec],
+        out_specs=out_spec,
+        scratch_shapes=[pltpu.VMEM((l, c_blk, b), jnp.float32)],
+    )
+    kernel = functools.partial(
+        _local_kernel, l=l, s_blk=s_blk, c_blk=c_blk, b=b
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((num_windows, l, b), jnp.float32),
         interpret=interpret,
     )

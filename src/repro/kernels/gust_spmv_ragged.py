@@ -1,11 +1,11 @@
-"""Ragged color-block streaming Pallas TPU kernel for GUST SpMV.
+"""Ragged color-block streaming Pallas TPU kernels for GUST SpMV.
 
 The padded flagship kernel (``gust_spmv.py``) runs a dense
 ``(W, C_pad/c_blk)`` grid: every window executes the color-block count of
 the *heaviest* window, so on skewed (power-law) matrices most grid steps
-stream and multiply all-zero padding blocks.  This kernel executes the
+stream and multiply all-zero padding blocks.  These kernels execute the
 ragged block stream built by :func:`repro.core.packing.pack_ragged`
-instead: a **1-D grid over the real blocks only** (``T_blk`` steps,
+instead: a **grid over the real blocks only** (``T_blk`` steps,
 ``T_blk = Σ_w max(ceil(C_w / c_blk), 1)``), driven by scalar prefetch
 (``pltpu.PrefetchScalarGridSpec``).
 
@@ -23,9 +23,18 @@ Blocks of one window are contiguous in the stream, so the output tile is
 revisited across exactly that window's blocks: the accumulator
 initializes on the window's first block and is flushed when the grid
 moves to the next window's tile — the paper's integrate-then-dump, minus
-the dead padding cycles.  The per-block math (fused Buffer-Filler gather,
-VPU multiply, one-hot routing matmul) is shared with the padded kernel
-(:func:`repro.kernels.gust_spmv.block_accumulate`).
+the dead padding cycles.
+
+Like the padded flagship, the Buffer-Filler gather runs in one of two
+modes (shared math in :mod:`repro.kernels.gust_spmv`):
+
+  * **resident** (:func:`make_gust_spmv_ragged`): x fully VMEM-resident,
+    one-hot contraction over all ``seg_count`` segments;
+  * **segment-local** (:func:`make_gust_spmv_ragged_local`): a third
+    scalar-prefetch operand — the pack-time ``seg_blk`` table — steers an
+    inner ``S_blk`` grid dimension that streams only the x tiles block
+    ``t`` references, shrinking per-block gather work from O(seg_count)
+    to O(S_blk) and x VMEM residency to a single (1, l, B) tile.
 """
 
 from __future__ import annotations
@@ -37,17 +46,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .gust_spmv import block_accumulate
+from .gust_spmv import block_accumulate, gather_local_step, route_rows
 
-__all__ = ["make_gust_spmv_ragged"]
+__all__ = ["make_gust_spmv_ragged", "make_gust_spmv_ragged_local"]
 
 
-def _kernel(bw_ref, bs_ref, m_ref, col_ref, row_ref, xs_ref, xf_ref, y_ref,
+def _kernel(bw_ref, bs_ref, m_ref, col_ref, row_ref, xs_ref, y_ref,
             *, l, seg_count, c_blk, b):
     t = pl.program_id(0)
     w = bw_ref[t]
     acc = block_accumulate(
-        m_ref, col_ref, row_ref, xs_ref, xf_ref,
+        m_ref, col_ref, row_ref, xs_ref,
         l=l, seg_count=seg_count, c_blk=c_blk, b=b,
     )
     is_first = t == bs_ref[w]
@@ -72,19 +81,21 @@ def make_gust_spmv_ragged(
     c_blk: int = 8,
     interpret: bool = True,
 ):
-    """Build the scalar-prefetch pallas_call for a ragged-stream geometry.
+    """Build the resident-gather scalar-prefetch pallas_call for a
+    ragged-stream geometry.
 
     Call signature of the returned function:
-    ``fn(block_window, block_starts, m_blk, col_blk, row_blk, xs, xf)``
-    with the stream blocks ``(num_blocks * c_blk, l)`` and the two x
-    layouts ``(seg_count, l, b)``; returns ``(num_windows, l, b)`` f32
-    per-window accumulators.
+    ``fn(block_window, block_starts, m_blk, col_blk, row_blk, xs)``
+    with the stream blocks ``(num_blocks * c_blk, l)`` and the straight
+    x layout ``(seg_count, l, b)`` (the lane-reversed layout is derived
+    in-kernel); returns ``(num_windows, l, b)`` f32 per-window
+    accumulators.
 
     BlockSpecs:
       * schedule stream (m/col/row): HBM -> VMEM tiles of (c_blk, l), one
         real block per grid step — no padding blocks are ever streamed;
-      * x (straight + flipped): full-array VMEM residency;
-      * y: the (1, l, B) accumulator tile of ``block_window[t]``,
+      * x (straight): full-array VMEM residency;
+      * y: the (1, l, b) accumulator tile of ``block_window[t]``,
         revisited across that window's contiguous blocks.
 
     Memoized on geometry, like the padded builder.
@@ -97,11 +108,92 @@ def make_gust_spmv_ragged(
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[sched_spec, sched_spec, sched_spec, x_spec, x_spec],
+        in_specs=[sched_spec, sched_spec, sched_spec, x_spec],
         out_specs=out_spec,
     )
     kernel = functools.partial(
         _kernel, l=l, seg_count=seg_count, c_blk=c_blk, b=b
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_windows, l, b), jnp.float32),
+        interpret=interpret,
+    )
+
+
+def _local_kernel(bw_ref, bs_ref, seg_ref, m_ref, col_ref, row_ref, xt_ref,
+                  y_ref, g_scr, *, l, s_blk, c_blk, b):
+    t, s = pl.program_id(0), pl.program_id(1)
+    w = bw_ref[t]
+
+    @pl.when(s == 0)
+    def _zero():
+        g_scr[...] = jnp.zeros_like(g_scr)
+
+    gather_local_step(col_ref, xt_ref, s, g_scr, l=l, c_blk=c_blk)
+
+    @pl.when(s == s_blk - 1)
+    def _flush():
+        m_blk = m_ref[...].astype(jnp.float32)  # (C_blk, l)
+        partial = m_blk.T[:, :, None] * g_scr[...]  # (l, C_blk, B)
+        acc = route_rows(
+            partial, row_ref[...].astype(jnp.int32), c_blk=c_blk, l=l, b=b
+        )
+        is_first = t == bs_ref[w]
+
+        @pl.when(is_first)
+        def _init():
+            y_ref[...] = acc
+
+        @pl.when(jnp.logical_not(is_first))
+        def _accum():
+            y_ref[...] += acc
+
+
+@functools.lru_cache(maxsize=256)
+def make_gust_spmv_ragged_local(
+    num_blocks: int,
+    num_windows: int,
+    l: int,
+    s_blk: int,
+    b: int,
+    *,
+    c_blk: int = 8,
+    interpret: bool = True,
+):
+    """Build the segment-local scalar-prefetch pallas_call for a
+    ragged-stream geometry.
+
+    Call signature of the returned function:
+    ``fn(block_window, block_starts, seg_flat, m_blk, col_loc, row_blk,
+    xs)`` — ``seg_flat`` is the pack-time segment table flattened to
+    ``(T_blk * S_blk,)`` int32 and ``col_loc`` the block-local columns.
+    Grid ``(num_blocks, S_blk)``: the inner dimension streams the x tile
+    of segment ``seg_flat[t*S_blk + s]`` (one (1, l, B) tile in VMEM per
+    step), the gathered block accumulates in VMEM scratch, and the
+    multiply + routing matmul fire on the last tile.  Combines the
+    ragged stream's "no dead padding cycles" with the segment-local
+    gather's O(S_blk) per-block cost — the full GUST utilization story.
+    """
+    grid = (num_blocks, s_blk)
+    sched_spec = pl.BlockSpec((c_blk, l), lambda t, s, bw, bs, seg: (t, 0))
+    x_spec = pl.BlockSpec(
+        (1, l, b), lambda t, s, bw, bs, seg: (seg[t * s_blk + s], 0, 0)
+    )
+    out_spec = pl.BlockSpec(
+        (1, l, b), lambda t, s, bw, bs, seg: (bw[t], 0, 0)
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[sched_spec, sched_spec, sched_spec, x_spec],
+        out_specs=out_spec,
+        scratch_shapes=[pltpu.VMEM((l, c_blk, b), jnp.float32)],
+    )
+    kernel = functools.partial(
+        _local_kernel, l=l, s_blk=s_blk, c_blk=c_blk, b=b
     )
     return pl.pallas_call(
         kernel,

@@ -31,11 +31,20 @@ from repro.core.packing import (
     default_cache,
     pack_schedule,
     packed_spec,
+    resolve_gather,
 )
 
-from .gust_spmv import make_gust_spmv
-from .gust_spmv_ragged import make_gust_spmv_ragged
-from .ref import gust_spmv_ragged_ref, gust_spmv_ref
+from .gust_spmv import make_gust_spmv, make_gust_spmv_local
+from .gust_spmv_ragged import (
+    make_gust_spmv_ragged,
+    make_gust_spmv_ragged_local,
+)
+from .ref import (
+    gust_spmv_local_ref,
+    gust_spmv_ragged_local_ref,
+    gust_spmv_ragged_ref,
+    gust_spmv_ref,
+)
 
 __all__ = [
     "PackedSchedule",
@@ -48,18 +57,28 @@ __all__ = [
 ]
 
 
-def _prep_x(x: jnp.ndarray, n: int, l: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Zero-pad x to (S*l, B) and produce straight + lane-reversed VMEM
-    layouts (S, l, B)."""
+def _prep_x(x: jnp.ndarray, n: int, l: int) -> jnp.ndarray:
+    """Zero-pad x to (S*l, B) and reshape to the straight segment-major
+    VMEM layout (S, l, B).  The lane-reversed layout the fused gather
+    selects against is derived in-kernel (``xs[:, ::-1, :]``), so only
+    one copy of x crosses HBM->VMEM."""
     seg_count = -(-n // l)
     pad = seg_count * l - n
     xp = jnp.pad(x, ((0, pad), (0, 0)))
-    x2d = xp.reshape(seg_count, l, -1)
-    return x2d, x2d[:, ::-1, :]
+    return xp.reshape(seg_count, l, -1)
+
+
+def _seg_flat(packed) -> jnp.ndarray:
+    """The pack-time segment table flattened to (T_blk * S_blk,) int32 —
+    the scalar-prefetch operand steering the local kernels' x-tile
+    pipeline."""
+    return jnp.asarray(packed.seg_blk, jnp.int32).reshape(-1)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("use_kernel", "interpret", "c_blk", "transpose_io")
+    jax.jit,
+    static_argnames=("use_kernel", "interpret", "c_blk", "transpose_io",
+                     "gather"),
 )
 def execute_spmm(
     packed: Union[PackedSchedule, RaggedSchedule],
@@ -69,6 +88,7 @@ def execute_spmm(
     interpret: bool = True,
     c_blk: int = 8,
     transpose_io: bool = False,
+    gather: str = "auto",
 ) -> jnp.ndarray:
     """``y = M @ x`` from either fixed-shape scheduled layout;
     x (n, B) -> y (m, B).
@@ -77,7 +97,22 @@ def execute_spmm(
     height is baked in at pack time).  ``transpose_io=True`` takes and
     returns batch-major arrays instead — x (B, n) -> y (B, m) — with both
     transposes inside this jit (XLA fuses them into the gather/scatter),
-    so batch-major callers never materialize a transposed copy."""
+    so batch-major callers never materialize a transposed copy.
+
+    ``gather`` selects the Buffer-Filler mode: ``"resident"`` (x whole in
+    VMEM, one-hot over every column segment), ``"local"`` (stream only
+    the ``S_blk`` x tiles each block references via the pack-time segment
+    table — O(S_blk) gather work per slot instead of O(seg_count), no
+    whole-x VMEM residency), or ``"auto"`` (the
+    :func:`~repro.core.packing.resolve_gather` locality-ratio decision).
+    Both modes are bit-identical.  The local path runs at the pack-time
+    block height (``packed.c_blk`` — the granularity its tables were
+    built for); a padded-layout ``c_blk`` override only applies to the
+    resident path."""
+    if gather not in ("resident", "local", "auto"):
+        raise ValueError(
+            f"gather must be 'resident', 'local' or 'auto', got {gather!r}"
+        )
     m, n = packed.shape
     if transpose_io:
         if x.ndim != 2 or x.shape[1] != n:
@@ -91,33 +126,79 @@ def execute_spmm(
     l, W = packed.l, packed.num_windows
     b = x.shape[1]
     ragged = isinstance(packed, RaggedSchedule)
+    if gather == "auto":
+        gather = resolve_gather(packed.s_blk, packed.seg_count)
 
     if use_kernel and packed.fusable:
-        x2d, x2f = _prep_x(x, n, l)
+        x2d = _prep_x(x, n, l)
         if ragged:
-            fn = make_gust_spmv_ragged(
-                packed.num_blocks, W, l, packed.seg_count, b,
-                c_blk=packed.c_blk, interpret=interpret,
+            if gather == "local":
+                fn = make_gust_spmv_ragged_local(
+                    packed.num_blocks, W, l, packed.s_blk, b,
+                    c_blk=packed.c_blk, interpret=interpret,
+                )
+                y_win = fn(
+                    packed.block_window, packed.block_starts,
+                    _seg_flat(packed),
+                    packed.m_blk, packed.col_loc, packed.row_blk, x2d,
+                )
+            else:
+                fn = make_gust_spmv_ragged(
+                    packed.num_blocks, W, l, packed.seg_count, b,
+                    c_blk=packed.c_blk, interpret=interpret,
+                )
+                y_win = fn(
+                    packed.block_window, packed.block_starts,
+                    packed.m_blk, packed.col_blk, packed.row_blk, x2d,
+                )
+        elif gather == "local":
+            fn = make_gust_spmv_local(
+                W, packed.c_pad, l, packed.s_blk, b, c_blk=packed.c_blk,
+                interpret=interpret,
             )
             y_win = fn(
-                packed.block_window, packed.block_starts,
-                packed.m_blk, packed.col_blk, packed.row_blk, x2d, x2f,
+                _seg_flat(packed),
+                packed.m_blk, packed.col_loc, packed.row_blk, x2d,
             )
         else:
             fn = make_gust_spmv(
                 W, packed.c_pad, l, packed.seg_count, b, c_blk=c_blk,
                 interpret=interpret,
             )
-            y_win = fn(packed.m_blk, packed.col_blk, packed.row_blk, x2d, x2f)
+            y_win = fn(packed.m_blk, packed.col_blk, packed.row_blk, x2d)
     else:
         seg_count = -(-n // l)
         xp = jnp.pad(x, ((0, seg_count * l - n), (0, 0)))
         if ragged:
-            y_win = gust_spmv_ragged_ref(
+            if gather == "local":
+                y_win = gust_spmv_ragged_local_ref(
+                    packed.m_blk,
+                    packed.col_loc,
+                    packed.row_blk,
+                    packed.seg_blk,
+                    packed.block_window,
+                    xp,
+                    num_windows=W,
+                    l=l,
+                    c_blk=packed.c_blk,
+                )
+            else:
+                y_win = gust_spmv_ragged_ref(
+                    packed.m_blk,
+                    packed.col_blk,
+                    packed.row_blk,
+                    packed.block_window,
+                    xp,
+                    num_windows=W,
+                    l=l,
+                    c_blk=packed.c_blk,
+                )
+        elif gather == "local":
+            y_win = gust_spmv_local_ref(
                 packed.m_blk,
-                packed.col_blk,
+                packed.col_loc,
                 packed.row_blk,
-                packed.block_window,
+                packed.seg_blk,
                 xp,
                 num_windows=W,
                 l=l,
@@ -133,9 +214,15 @@ def execute_spmm(
                 l=l,
             )
     y_sorted = y_win.reshape(W * l, b)
-    out = jnp.zeros((max(m, W * l), b), jnp.float32)
-    out = out.at[packed.row_perm].set(y_sorted)
-    y = out[:m].astype(x.dtype)
+    if packed.identity_perm:
+        # load_balance=False packs carry the identity permutation: the
+        # scheduled row order IS the output order, so skip the scatter
+        # (bit-identical: zeros.at[arange].set(y) == y)
+        y = y_sorted[:m].astype(x.dtype)
+    else:
+        out = jnp.zeros((max(m, W * l), b), jnp.float32)
+        out = out.at[packed.row_perm].set(y_sorted)
+        y = out[:m].astype(x.dtype)
     return y.T if transpose_io else y
 
 

@@ -4,6 +4,13 @@ These mirror the kernels' contracts exactly — same inputs, same outputs —
 with no Pallas, no BlockSpecs, no one-hot tricks: direct gathers and
 scatter-adds.  Every kernel test sweeps shapes/dtypes and asserts
 ``assert_allclose(kernel(...), ref(...))``.
+
+The segment-local twins (``*_local_ref``) replace the direct gather
+``x[col]`` with the two-step segment-table gather the local kernels run
+— x tiles selected by ``seg_blk``, then a block-local index — and share
+every instruction downstream, so local-vs-resident bit-identity is an
+oracle-level property too (the gathered values are equal bitwise: the
+table maps each local id back to the slot's original global column).
 """
 
 from __future__ import annotations
@@ -11,7 +18,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gust_spmv_ref", "gust_spmv_ragged_ref", "gather_fill_ref"]
+__all__ = [
+    "gust_spmv_ref",
+    "gust_spmv_ragged_ref",
+    "gust_spmv_local_ref",
+    "gust_spmv_ragged_local_ref",
+    "gather_fill_ref",
+    "gather_fill_local_ref",
+]
 
 
 def gather_fill_ref(
@@ -20,6 +34,58 @@ def gather_fill_ref(
 ) -> jnp.ndarray:
     """Oracle for the Buffer Filler: plain gather ``x[col]``, (T, l, B)."""
     return jnp.take(x_padded.astype(jnp.float32), col_blocks.astype(jnp.int32), axis=0)
+
+
+def gather_fill_local_ref(
+    col_loc: jnp.ndarray,  # (T*c_blk, l) block-local column indices
+    seg_blk: jnp.ndarray,  # (T, S_blk) int32 per-block segment table
+    x_padded: jnp.ndarray,  # (S*l, B) zero-padded vector
+    *,
+    l: int,
+    c_blk: int,
+) -> jnp.ndarray:
+    """Oracle for the segment-local Buffer Filler: gather each block's
+    ``S_blk`` x tiles by the segment table, then index them block-locally
+    — ``x[seg_blk[t, col_loc // l] * l + col_loc % l]``.  Bit-identical
+    to :func:`gather_fill_ref` on the same stream because the table maps
+    every local id back to the slot's original column."""
+    seg_blk = seg_blk.astype(jnp.int32)
+    t_blk, s_blk = seg_blk.shape
+    b = x_padded.shape[1]
+    tiles = x_padded.astype(jnp.float32).reshape(-1, l, b)[seg_blk]
+    # tiles: (T, S_blk, l, B) -> local address space (T, S_blk*l, B)
+    tiles = tiles.reshape(t_blk, s_blk * l, b)
+    rows = col_loc.shape[0]
+    blk = jnp.arange(rows, dtype=jnp.int32) // c_blk
+    return tiles[blk[:, None], col_loc.astype(jnp.int32), :]  # (rows, l, B)
+
+
+def _window_accumulate(
+    m_blocks: jnp.ndarray,  # (T, l) values (0 in padding)
+    v_sch: jnp.ndarray,  # (T, l, B) gathered vector stream
+    row_blocks: jnp.ndarray,  # (T, l) int32 adder index
+    window: jnp.ndarray,  # (T,) int32 window id of each stream row
+    *,
+    num_windows: int,
+    l: int,
+) -> jnp.ndarray:
+    """Shared multiply + scatter-add of every oracle: identical
+    instructions downstream of the gather keep the resident/local oracle
+    pair bit-identical by construction."""
+    partial = m_blocks.astype(jnp.float32)[:, :, None] * v_sch
+    adder = window[:, None] * l + row_blocks.astype(jnp.int32)  # (T, l)
+    b = v_sch.shape[-1]
+    y = jax.ops.segment_sum(
+        partial.reshape(-1, b),
+        adder.reshape(-1),
+        num_segments=num_windows * l,
+    )
+    return y.reshape(num_windows, l, b)
+
+
+def _padded_windows(total: int, num_windows: int) -> jnp.ndarray:
+    c_pad = total // num_windows
+    return jnp.arange(total, dtype=jnp.int32) // c_pad
 
 
 def gust_spmv_ref(
@@ -33,19 +99,31 @@ def gust_spmv_ref(
 ) -> jnp.ndarray:
     """Oracle for the flagship kernel: gather, multiply, scatter-add into
     per-window accumulators.  Returns (W, l, B) f32."""
-    total = m_blocks.shape[0]
-    c_pad = total // num_windows
     v_sch = gather_fill_ref(col_blocks, x_padded)  # (T, l, B)
-    partial = m_blocks.astype(jnp.float32)[:, :, None] * v_sch
-    window = jnp.arange(total, dtype=jnp.int32) // c_pad
-    adder = window[:, None] * l + row_blocks.astype(jnp.int32)  # (T, l)
-    b = x_padded.shape[1]
-    y = jax.ops.segment_sum(
-        partial.reshape(-1, b),
-        adder.reshape(-1),
-        num_segments=num_windows * l,
+    window = _padded_windows(m_blocks.shape[0], num_windows)
+    return _window_accumulate(
+        m_blocks, v_sch, row_blocks, window, num_windows=num_windows, l=l
     )
-    return y.reshape(num_windows, l, b)
+
+
+def gust_spmv_local_ref(
+    m_blocks: jnp.ndarray,  # (W*C_pad, l) values (0 in padding)
+    col_loc: jnp.ndarray,  # (W*C_pad, l) block-local columns
+    row_blocks: jnp.ndarray,  # (W*C_pad, l) int32 adder index
+    seg_blk: jnp.ndarray,  # (T_blk, S_blk) segment table
+    x_padded: jnp.ndarray,  # (S*l, B)
+    *,
+    num_windows: int,
+    l: int,
+    c_blk: int,
+) -> jnp.ndarray:
+    """Segment-local oracle for the padded layout (gather via the
+    pack-time table; same accumulate).  Returns (W, l, B) f32."""
+    v_sch = gather_fill_local_ref(col_loc, seg_blk, x_padded, l=l, c_blk=c_blk)
+    window = _padded_windows(m_blocks.shape[0], num_windows)
+    return _window_accumulate(
+        m_blocks, v_sch, row_blocks, window, num_windows=num_windows, l=l
+    )
 
 
 def gust_spmv_ragged_ref(
@@ -63,13 +141,27 @@ def gust_spmv_ragged_ref(
     with the window of each stream row read from ``block_window`` instead
     of a fixed ``C_pad`` stride.  Returns (W, l, B) f32."""
     v_sch = gather_fill_ref(col_blocks, x_padded)  # (T, l, B)
-    partial = m_blocks.astype(jnp.float32)[:, :, None] * v_sch
     window = jnp.repeat(block_window.astype(jnp.int32), c_blk)  # (T,)
-    adder = window[:, None] * l + row_blocks.astype(jnp.int32)  # (T, l)
-    b = x_padded.shape[1]
-    y = jax.ops.segment_sum(
-        partial.reshape(-1, b),
-        adder.reshape(-1),
-        num_segments=num_windows * l,
+    return _window_accumulate(
+        m_blocks, v_sch, row_blocks, window, num_windows=num_windows, l=l
     )
-    return y.reshape(num_windows, l, b)
+
+
+def gust_spmv_ragged_local_ref(
+    m_blocks: jnp.ndarray,  # (T_blk*c_blk, l) values (0 in padding)
+    col_loc: jnp.ndarray,  # (T_blk*c_blk, l) block-local columns
+    row_blocks: jnp.ndarray,  # (T_blk*c_blk, l) int32 adder index
+    seg_blk: jnp.ndarray,  # (T_blk, S_blk) segment table
+    block_window: jnp.ndarray,  # (T_blk,) int32 window id of each block
+    x_padded: jnp.ndarray,  # (S*l, B)
+    *,
+    num_windows: int,
+    l: int,
+    c_blk: int,
+) -> jnp.ndarray:
+    """Segment-local oracle for the ragged stream.  Returns (W, l, B)."""
+    v_sch = gather_fill_local_ref(col_loc, seg_blk, x_padded, l=l, c_blk=c_blk)
+    window = jnp.repeat(block_window.astype(jnp.int32), c_blk)
+    return _window_accumulate(
+        m_blocks, v_sch, row_blocks, window, num_windows=num_windows, l=l
+    )

@@ -225,7 +225,27 @@ def build_gust_decode_cell(arch_id: str, mesh, density: float = 0.1,
         NamedSharding(mesh, P()),
     ), {"n_params": _count_params(params_specs), "gust_density": density,
         "gust_layout": pc.layout, "gust_dtypes": (pc.value_dtype, pc.index_dtype),
+        "gust_gather": pc.gather,
+        # spec plans size the gather table at the worst case (no measured
+        # locality); the per-mat S_blk lets the roofline read the x-tile
+        # working set without running the scheduler.  Read through the
+        # codec (not meta-tuple indices) so meta-layout changes can't
+        # silently misreport it.
+        "gust_s_blk": {
+            k: _spec_artifact(v).s_blk for k, v in gust_specs["mats"].items()
+        },
         "tokens_per_step": shape.global_batch}
+
+
+def _spec_artifact(entry):
+    """Rebuild one dryrun_specs mat entry through the leaves/meta codec
+    (works on ShapeDtypeStruct leaves; only static attrs are read)."""
+    from repro.core.packing import packed_from_leaves, ragged_from_leaves
+
+    meta = tuple(entry["meta"])
+    decode = ragged_from_leaves if meta and meta[0] == "ragged" else \
+        packed_from_leaves
+    return decode(entry["leaves"], meta)
 
 
 # ---------------------------------------------------------------------------

@@ -63,6 +63,9 @@ class GustServeConfig:
     ragged: bool = False  # ragged color-block streams: per-layer stacks
     # hold only real cycle blocks (pruned LLM matrices are skewed — the
     # padded layout streams every window at the heaviest window's C_pad)
+    gather: str = "auto"  # Buffer-Filler mode: "resident" (whole x in
+    # VMEM), "local" (stream only each block's S_blk referenced x tiles —
+    # the wide-d_ff fast path), or "auto" (measured locality ratio)
     mats: Tuple[str, ...] = _MLP_MATS
 
     @property
@@ -84,6 +87,7 @@ class GustServeConfig:
             c_blk=8,
             layout="ragged" if self.ragged else "padded",
             backend="pallas" if self.use_kernel else "jnp",
+            gather=self.gather,
             interpret=True,
             value_dtype=jnp.dtype(self.value_dtype).name,
             index_dtype=jnp.dtype(self.index_dtype).name,

@@ -325,7 +325,9 @@ def test_dryrun_specs_ragged_layout():
         assert entry["meta"][0] == "ragged"
         leaves = entry["leaves"]
         assert "block_window" in leaves and "block_starts" in leaves
-        tag, l, w, c_blk, t_blk, shape, fusable = entry["meta"]
+        assert "seg_blk" in leaves and "col_loc" in leaves
+        (tag, l, w, c_blk, t_blk, shape, fusable, s_blk,
+         identity_perm) = entry["meta"]
         assert leaves["m_blk"].shape == (lm.stack.reps, t_blk * c_blk, l)
         assert leaves["block_starts"].shape == (lm.stack.reps, w + 1)
         # spec round-trips through the codec into a RaggedSchedule

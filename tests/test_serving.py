@@ -115,10 +115,12 @@ def test_dryrun_specs_shapes(dense_lm):
     gcfg = GustServeConfig(density=0.1, gust_length=16)
     specs = dryrun_specs(lm, gcfg)
     for name, entry in specs["mats"].items():
-        l, w, c_pad, shape, fusable = entry["meta"]
+        (l, w, c_pad, shape, fusable, c_blk, s_blk,
+         identity_perm) = entry["meta"]
         assert fusable and l == 16
         m_blk = entry["leaves"]["m_blk"]
         assert m_blk.shape == (lm.stack.reps, w * c_pad, l)
+        assert entry["leaves"]["seg_blk"].shape[-1] == s_blk
 
 
 def test_gust_linear_vs_dense():
