@@ -23,6 +23,7 @@ _EXPORTS = {
     "GustPlan": "repro.core.plan",
     "PlanConfig": "repro.core.plan",
     "PlanCost": "repro.core.plan",
+    "TuneResult": "repro.core.plan",
     # formats + scheduler
     "COOMatrix": "repro.core.formats",
     "GustSchedule": "repro.core.formats",
@@ -95,7 +96,13 @@ if TYPE_CHECKING:  # static analyzers see the real symbols
         ScheduleCache,
         clear_cache,
     )
-    from repro.core.plan import GustPlan, PlanConfig, PlanCost, plan  # noqa: F401
+    from repro.core.plan import (  # noqa: F401
+        GustPlan,
+        PlanConfig,
+        PlanCost,
+        TuneResult,
+        plan,
+    )
     from repro.core.scheduler import schedule  # noqa: F401
     from repro.core.spmv import (  # noqa: F401
         distributed_spmv,

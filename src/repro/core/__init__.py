@@ -14,7 +14,7 @@ from .packing import (
     ragged_waste_ratio,
     schedule_packed,
 )
-from .plan import GustPlan, PlanConfig, PlanCost, plan
+from .plan import GustPlan, PlanConfig, PlanCost, TuneResult, plan
 from .spmv import (
     spmv,
     spmv_scheduled,
@@ -38,6 +38,7 @@ __all__ = [
     "GustPlan",
     "PlanConfig",
     "PlanCost",
+    "TuneResult",
     "plan",
     "PackedSchedule",
     "RaggedSchedule",

@@ -145,6 +145,8 @@ __all__ = [
     "schedule_packed",
     "default_cache",
     "clear_cache",
+    "DEFAULT_TUNE_IMPROVEMENT",
+    "resolve_tuning",
 ]
 
 
@@ -165,6 +167,13 @@ class PackedSchedule:
                W * C_pad / c_blk.
       col_loc: (W * C_pad, l) col_blk remapped to block-local segment ids
                (``local_seg * l + col % l``; index dtype preserved).
+      scale_blk: (T_blk,) f32 per-block dequantization scales, or ``None``
+               on unquantized packs.  Present exactly when ``m_blk`` is
+               int8: the stored value of slot ``(r, j)`` is
+               ``m[r, j] = q[r, j] * scale_blk[r // c_blk]`` with dequant
+               fused into the kernel accumulate in f32.  Padding slots
+               quantize to exactly 0 (scale of an all-zero block is 1.0),
+               so the zero-contribution invariant survives quantization.
 
     Static (aux):
       l, num_windows, c_pad, shape=(m, n), fusable (lane structure verified
@@ -187,26 +196,38 @@ class PackedSchedule:
     c_blk: int
     s_blk: int
     identity_perm: bool
+    scale_blk: Optional[jnp.ndarray] = None
 
     def tree_flatten(self):
         leaves = (self.m_blk, self.col_blk, self.row_blk, self.row_perm,
-                  self.seg_blk, self.col_loc)
+                  self.seg_blk, self.col_loc, self.scale_blk)
         aux = (self.l, self.num_windows, self.c_pad, self.shape, self.fusable,
                self.c_blk, self.s_blk, self.identity_perm)
         return leaves, aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(*leaves, *aux)
+        *arr, scale = leaves
+        return cls(*arr, *aux, scale_blk=scale)
 
     @property
     def seg_count(self) -> int:
         return -(-self.shape[1] // self.l)
 
     @property
+    def quantized(self) -> bool:
+        return self.scale_blk is not None
+
+    @property
     def stream_bytes(self) -> int:
-        """HBM bytes of the scheduled stream (value f32 + col i32 + row i32)."""
-        return int(self.m_blk.size) * (4 + 4 + 4)
+        """HBM bytes of the scheduled stream (value + col + row leaves at
+        their actual dtypes — an int8 value plane is a quarter of the f32
+        one) plus the per-block scales when quantized."""
+        extra = (self.scale_blk,) if self.scale_blk is not None else ()
+        return sum(
+            int(a.size) * jnp.dtype(a.dtype).itemsize
+            for a in (self.m_blk, self.col_blk, self.row_blk) + extra
+        )
 
     def repad_to(self, c_pad: int) -> "PackedSchedule":
         """Grow the per-window color padding to ``c_pad`` slots.
@@ -239,6 +260,20 @@ class PackedSchedule:
         seg_blk, col_loc, s_blk = _local_gather_tables(
             np.asarray(col_grown), l, self.c_blk, s_min=self.s_blk
         )
+        scale = self.scale_blk
+        if scale is not None:
+            # scales are per-(c_blk, l) block: the grown padding must land
+            # on whole new blocks for the old blocks' scales to stay put
+            if c_pad % self.c_blk or self.c_pad % self.c_blk:
+                raise ValueError(
+                    f"quantized repad_to requires c_pad multiples of c_blk="
+                    f"{self.c_blk}, got {self.c_pad} -> {c_pad}"
+                )
+            old_bpw = self.c_pad // self.c_blk
+            new_bpw = c_pad // self.c_blk
+            s2 = jnp.asarray(scale).reshape(W, old_bpw)
+            pad = jnp.ones((W, new_bpw - old_bpw), s2.dtype)  # all-zero blocks
+            scale = jnp.concatenate([s2, pad], axis=1).reshape(-1)
         return PackedSchedule(
             m_blk=grow(self.m_blk, np.zeros(l, np.float32)),
             col_blk=col_grown,
@@ -254,6 +289,7 @@ class PackedSchedule:
             c_blk=self.c_blk,
             s_blk=s_blk,
             identity_perm=self.identity_perm,
+            scale_blk=scale,
         )
 
     def repad_seg_to(self, s_blk: int) -> "PackedSchedule":
@@ -291,6 +327,10 @@ class RaggedSchedule:
       block_starts: (W + 1,) int32 — per-window block prefix: window ``w``
                     owns stream blocks ``block_starts[w]:block_starts[w+1]``
                     (always at least one).
+      scale_blk:    (T_blk,) f32 per-block dequantization scales, or
+                    ``None`` on unquantized packs (present exactly when
+                    ``m_blk`` is int8; padding quantizes to 0 — same
+                    contract as :class:`PackedSchedule`).
 
     Static (aux): l, num_windows, c_blk, num_blocks (= T_blk), shape,
     fusable, s_blk, identity_perm.
@@ -312,22 +352,28 @@ class RaggedSchedule:
     fusable: bool
     s_blk: int
     identity_perm: bool
+    scale_blk: Optional[jnp.ndarray] = None
 
     def tree_flatten(self):
         leaves = (self.m_blk, self.col_blk, self.row_blk, self.row_perm,
                   self.seg_blk, self.col_loc,
-                  self.block_window, self.block_starts)
+                  self.block_window, self.block_starts, self.scale_blk)
         aux = (self.l, self.num_windows, self.c_blk, self.num_blocks,
                self.shape, self.fusable, self.s_blk, self.identity_perm)
         return leaves, aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(*leaves, *aux)
+        *arr, scale = leaves
+        return cls(*arr, *aux, scale_blk=scale)
 
     @property
     def seg_count(self) -> int:
         return -(-self.shape[1] // self.l)
+
+    @property
+    def quantized(self) -> bool:
+        return self.scale_blk is not None
 
     @property
     def streamed_slots(self) -> int:
@@ -338,11 +384,13 @@ class RaggedSchedule:
     def stream_bytes(self) -> int:
         """HBM bytes of the scheduled stream (value + col + row leaves at
         their actual dtypes — a compact bf16/int16 stream is ~half the
-        f32/i32 one) plus the scalar block metadata."""
+        f32/i32 one, an int8 value plane a quarter) plus the scalar block
+        metadata and the per-block scales when quantized."""
+        extra = (self.scale_blk,) if self.scale_blk is not None else ()
         return sum(
             int(a.size) * jnp.dtype(a.dtype).itemsize
             for a in (self.m_blk, self.col_blk, self.row_blk,
-                      self.block_window, self.block_starts)
+                      self.block_window, self.block_starts) + extra
         )
 
     def repad_to_blocks(self, num_blocks: int) -> "RaggedSchedule":
@@ -381,6 +429,12 @@ class RaggedSchedule:
         seg_blk, col_loc, s_blk = _local_gather_tables(
             np.asarray(col_grown), l, self.c_blk, s_min=self.s_blk
         )
+        scale = self.scale_blk
+        if scale is not None:
+            # appended blocks are all padding (value 0): scale 1.0
+            scale = jnp.concatenate(
+                [jnp.asarray(scale), jnp.ones((extra,), jnp.asarray(scale).dtype)]
+            )
         return RaggedSchedule(
             m_blk=grow(self.m_blk, np.zeros(l, np.float32)),
             col_blk=col_grown,
@@ -398,6 +452,7 @@ class RaggedSchedule:
             fusable=self.fusable,
             s_blk=s_blk,
             identity_perm=self.identity_perm,
+            scale_blk=scale,
         )
 
     def repad_seg_to(self, s_blk: int) -> "RaggedSchedule":
@@ -484,6 +539,39 @@ def _fusable(sched: GustSchedule) -> bool:
     return bool(np.all((off == lane[None, :]) | (off == (l - 1 - lane)[None, :])))
 
 
+def _quantize_stream(
+    m_b: np.ndarray, c_blk: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-block symmetric int8 quantization of a packed value stream.
+
+    For each ``(c_blk, l)`` block: ``scale = absmax / 127`` (1.0 for
+    all-zero blocks, so padding blocks stay well-defined) and
+    ``q = clip(rint(v / scale), -127, 127)`` int8.  Exact zeros — every
+    padding slot — quantize to exactly 0 regardless of the block scale,
+    which is what preserves the packed-format zero-contribution
+    invariant.  The dequant semantics the kernels and oracles share
+    bit-exactly: ``v̂ = float32(q) * scale`` (both sides perform this one
+    f32 multiply, so kernel and oracle agree bitwise).
+
+    Returns ``(q (rows, l) int8, scale (rows // c_blk,) f32)``.
+    """
+    m_b = np.ascontiguousarray(m_b, np.float32)
+    rows, l = m_b.shape
+    if rows % c_blk:
+        raise ValueError(f"stream rows {rows} not a multiple of c_blk {c_blk}")
+    blocks = m_b.reshape(rows // c_blk, c_blk * l)
+    absmax = np.abs(blocks).max(axis=1)
+    scale = np.where(absmax > 0, absmax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(
+        np.rint(blocks / scale[:, None].astype(np.float32)), -127, 127
+    ).astype(np.int8)
+    return q.reshape(rows, l), scale
+
+
+def _is_int8(value_dtype) -> bool:
+    return jnp.dtype(value_dtype) == jnp.dtype(jnp.int8)
+
+
 def _local_gather_tables(
     col: np.ndarray, l: int, c_blk: int, s_min: int = 1
 ) -> Tuple[np.ndarray, np.ndarray, int]:
@@ -554,6 +642,11 @@ def pack_schedule(
     m_b, c_b, r_b, c_pad, fusable = pack_blocks(sched, c_blk)
     row_perm = _extended_row_perm(sched)
     seg_blk, col_loc, s_blk = _local_gather_tables(c_b, l, c_blk)
+    scale = None
+    if _is_int8(value_dtype):
+        m_b, scale = _quantize_stream(m_b, c_blk)
+        scale = jnp.asarray(scale)
+        value_dtype = jnp.int8
 
     return PackedSchedule(
         m_blk=jnp.asarray(m_b, value_dtype),
@@ -572,6 +665,7 @@ def pack_schedule(
         identity_perm=bool(
             np.array_equal(row_perm, np.arange(W * l, dtype=np.int32))
         ),
+        scale_blk=scale,
     )
 
 
@@ -642,6 +736,11 @@ def pack_ragged(
     block_window = np.repeat(np.arange(W, dtype=np.int32), bpw)
     row_perm = _extended_row_perm(sched)
     seg_blk, col_loc, s_blk = _local_gather_tables(c_b, l, c_blk)
+    scale = None
+    if _is_int8(value_dtype):
+        m_b, scale = _quantize_stream(m_b, c_blk)
+        scale = jnp.asarray(scale)
+        value_dtype = jnp.int8
 
     return RaggedSchedule(
         m_blk=jnp.asarray(m_b, value_dtype),
@@ -662,6 +761,7 @@ def pack_ragged(
         identity_perm=bool(
             np.array_equal(row_perm, np.arange(W * l, dtype=np.int32))
         ),
+        scale_blk=scale,
     )
 
 
@@ -727,6 +827,42 @@ def resolve_gather(
     return "local" if s_blk <= locality_ratio * seg_count else "resident"
 
 
+#: A measured tune winner must beat the static-default baseline by this
+#: wall-clock factor to displace it — consumed only through
+#: :func:`resolve_tuning`, the one measured-tuning decision point (the
+#: measured twin of :data:`DEFAULT_WASTE_THRESHOLD` /
+#: :data:`DEFAULT_LOCALITY_RATIO`).  The margin absorbs timer noise so
+#: ``GustPlan.tune`` is never slower than the static defaults.
+DEFAULT_TUNE_IMPROVEMENT = 1.05
+
+
+def resolve_tuning(
+    measurements: Dict, baseline, min_improvement: float = None,
+):
+    """The one measured-tuning decision point: return the key of the
+    fastest candidate in ``measurements`` (a ``{candidate_key: seconds}``
+    dict), unless it fails to beat ``baseline``'s own measurement by
+    ``min_improvement`` — then the baseline key is returned unchanged.
+    Guarantees a tuned plan is never slower than the static
+    :func:`resolve_layout`/:func:`resolve_gather` defaults (to timer
+    noise), because the baseline is always itself a measured candidate.
+    ``None`` means :data:`DEFAULT_TUNE_IMPROVEMENT`.  Every measured-tune
+    caller — ``GustPlan.tune`` — delegates here."""
+    if min_improvement is None:
+        min_improvement = DEFAULT_TUNE_IMPROVEMENT
+    if baseline not in measurements:
+        raise ValueError(
+            f"baseline {baseline!r} missing from measurements "
+            f"({sorted(map(repr, measurements))})"
+        )
+    if not all(t > 0 for t in measurements.values()):
+        raise ValueError("measurements must be positive wall-clock seconds")
+    best = min(measurements, key=measurements.get)
+    if measurements[baseline] / measurements[best] >= min_improvement:
+        return best
+    return baseline
+
+
 def pack_auto(
     sched: GustSchedule, c_blk: int = 8, *, waste_threshold: float = None,
     value_dtype=jnp.float32, index_dtype=jnp.int32,
@@ -782,6 +918,7 @@ def packed_spec(
         c_blk=c_blk,
         s_blk=s_blk,
         identity_perm=False,
+        scale_blk=sds((t_blk,), jnp.float32) if _is_int8(value_dtype) else None,
     )
 
 
@@ -819,6 +956,9 @@ def ragged_spec(
         fusable=True,
         s_blk=s_blk,
         identity_perm=False,
+        scale_blk=(
+            sds((num_blocks,), jnp.float32) if _is_int8(value_dtype) else None
+        ),
     )
 
 
@@ -828,8 +968,12 @@ def ragged_spec(
 
 
 def packed_leaves(p: PackedSchedule) -> Dict:
-    """Array leaves of a packed schedule as a plain dict (jit-able pytree)."""
-    return {
+    """Array leaves of a packed schedule as a plain dict (jit-able pytree).
+
+    The ``scale_blk`` key is present exactly when the pack is quantized —
+    meta tuples stay unchanged, so old serialized stacks round-trip and
+    quantization is inferred from the value leaf's dtype."""
+    leaves = {
         "m_blk": p.m_blk,
         "col_blk": p.col_blk,
         "row_blk": p.row_blk,
@@ -837,6 +981,9 @@ def packed_leaves(p: PackedSchedule) -> Dict:
         "seg_blk": p.seg_blk,
         "col_loc": p.col_loc,
     }
+    if p.scale_blk is not None:
+        leaves["scale_blk"] = p.scale_blk
+    return leaves
 
 
 def packed_meta(p: PackedSchedule) -> Tuple:
@@ -858,12 +1005,15 @@ def packed_from_leaves(leaves: Dict, meta: Tuple) -> PackedSchedule:
         col_loc=leaves["col_loc"],
         l=l, num_windows=w, c_pad=c_pad, shape=shape, fusable=fusable,
         c_blk=c_blk, s_blk=s_blk, identity_perm=identity_perm,
+        scale_blk=leaves.get("scale_blk"),
     )
 
 
 def ragged_leaves(r: RaggedSchedule) -> Dict:
-    """Array leaves of a ragged stream as a plain dict (jit-able pytree)."""
-    return {
+    """Array leaves of a ragged stream as a plain dict (jit-able pytree).
+    ``scale_blk`` present exactly when quantized (see
+    :func:`packed_leaves`)."""
+    leaves = {
         "m_blk": r.m_blk,
         "col_blk": r.col_blk,
         "row_blk": r.row_blk,
@@ -873,6 +1023,9 @@ def ragged_leaves(r: RaggedSchedule) -> Dict:
         "block_window": r.block_window,
         "block_starts": r.block_starts,
     }
+    if r.scale_blk is not None:
+        leaves["scale_blk"] = r.scale_blk
+    return leaves
 
 
 def ragged_meta(r: RaggedSchedule) -> Tuple:
@@ -899,6 +1052,7 @@ def ragged_from_leaves(leaves: Dict, meta: Tuple) -> RaggedSchedule:
         block_starts=leaves["block_starts"],
         l=l, num_windows=w, c_blk=c_blk, num_blocks=t_blk, shape=shape,
         fusable=fusable, s_blk=s_blk, identity_perm=identity_perm,
+        scale_blk=leaves.get("scale_blk"),
     )
 
 
@@ -1095,9 +1249,19 @@ class ScheduleCache:
 
     def memo(self, key: Tuple, build):
         """Generic LRU memoization for artifacts *derived from* cached
-        entries (e.g. the distributed device-major shard layout).  ``key``
-        must lead with a tag distinct from the built-in routes."""
+        entries (e.g. the distributed device-major shard layout, or a
+        ``GustPlan.tune`` result).  ``key`` must lead with a tag distinct
+        from the built-in routes."""
         return self._get(key, build)
+
+    def stats(self) -> Dict[str, int]:
+        """Hit/miss/entry counters — surfaced on ``GustPlan.cost()`` so
+        benchmarks and serving logs can report schedule-reuse rates."""
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "entries": len(self._store),
+        }
 
     def clear(self):
         self._store.clear()

@@ -55,6 +55,7 @@ from .packing import (
     pack_ragged,
     pack_schedule,
     resolve_gather,
+    resolve_tuning,
     packed_from_leaves,
     packed_leaves,
     packed_meta,
@@ -67,12 +68,13 @@ from .packing import (
     resolve_layout,
 )
 
-__all__ = ["PlanConfig", "PlanCost", "GustPlan", "plan"]
+__all__ = ["PlanConfig", "PlanCost", "TuneResult", "GustPlan", "plan"]
 
 _LAYOUTS = ("padded", "ragged", "auto")
 _BACKENDS = ("jnp", "pallas", "auto")
 _COLORERS = ("paper", "fast", "exact")
 _GATHERS = ("resident", "local", "auto")
+_PIPELINES = ("single", "double", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,10 +99,24 @@ class PlanConfig:
                        or ``auto`` (segment-local when the measured
                        ``S_blk / seg_count`` locality ratio is low —
                        :func:`~repro.core.packing.resolve_gather`).
+      pipeline:        VMEM streaming mode of the Pallas kernels —
+                       ``single`` (one tile in flight), ``double``
+                       (two-slot ping/pong scratch: the DMA fetching
+                       tile ``s+1`` overlaps the accumulate of tile
+                       ``s``), or ``auto`` (double on the kernel path).
+                       Bit-identical either way; the jnp backend
+                       ignores it.
       waste_threshold: padded/ragged stream ratio above which ``auto``
                        picks ragged; ``None`` = the shared default.
       value_dtype:     dtype name of the value leaves (``float32`` |
-                       ``bfloat16``).
+                       ``bfloat16`` | ``int8``).  ``int8`` turns on
+                       pack-time per-block quantization: values are
+                       stored int8 with one f32 scale per ``c_blk``
+                       cycle block (``scale_blk``), dequantized in-kernel
+                       with a single f32 multiply.  Because the scales
+                       are aligned to the *pack-time* ``c_blk`` blocks,
+                       an execute-time ``c_blk`` override is rejected on
+                       quantized plans — re-pack instead.
       index_dtype:     dtype name of the index leaves (``int32`` |
                        ``int16``).
       interpret:       Pallas interpret mode; ``None`` = interpret off TPU.
@@ -114,6 +130,7 @@ class PlanConfig:
     layout: str = "auto"
     backend: str = "auto"
     gather: str = "auto"
+    pipeline: str = "auto"
     waste_threshold: Optional[float] = None
     value_dtype: str = "float32"
     index_dtype: str = "int32"
@@ -138,6 +155,10 @@ class PlanConfig:
         if self.gather not in _GATHERS:
             raise ValueError(
                 f"gather must be one of {_GATHERS}, got {self.gather!r}"
+            )
+        if self.pipeline not in _PIPELINES:
+            raise ValueError(
+                f"pipeline must be one of {_PIPELINES}, got {self.pipeline!r}"
             )
         # normalize dtypes to canonical names so configs hash/compare/
         # serialize stably whether built from strings or jnp dtypes
@@ -186,6 +207,16 @@ class PlanCost:
       (``S_blk · l · 4``) — the resident number is the width cap the
       local mode removes;
     * ``gather`` — the mode this plan resolves to.
+
+    The observability block (PR 6) records *why a path was taken* so
+    benchmarks and serving logs can report it without re-deriving the
+    resolution logic:
+
+    * ``backend`` / ``pipeline`` — the resolved (never ``auto``) execution
+      choices next to the resolved ``layout``/``gather``;
+    * ``cache_hits`` / ``cache_misses`` / ``cache_entries`` — the plan's
+      :class:`~repro.core.packing.ScheduleCache` counters at cost time
+      (all zero for cache-less plans).
     """
 
     cycles: int
@@ -205,9 +236,54 @@ class PlanCost:
     gather_flops_local: int
     x_vmem_bytes_resident: int
     x_vmem_bytes_local: int
+    backend: str = "jnp"
+    pipeline: str = "single"
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_entries: int = 0
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Record of one measured :meth:`GustPlan.tune` sweep.
+
+    Candidate keys are ``(c_blk, l, layout, gather)`` tuples.  ``choice``
+    is the winner picked by the single tuning decision point
+    (:func:`~repro.core.packing.resolve_tuning`): the fastest measured
+    candidate, unless it fails to beat ``baseline`` — the plan's static
+    ``resolve_layout``/``resolve_gather`` resolution — by the margin, in
+    which case the baseline stands.  ``cost_consistent`` validates the
+    winner against the cost-model ordering: it streams no more bytes
+    than the baseline predicted (a ``False`` here flags a measurement
+    that contradicts the Eq. 9-11 story and is worth a look, not an
+    error).  ``pruned`` lists candidates :class:`PlanCost` rejected
+    before timing (predicted stream bytes beyond ``prune_ratio`` × the
+    best prediction)."""
+
+    choice: Tuple[int, int, str, str]
+    baseline: Tuple[int, int, str, str]
+    measurements: Dict[Tuple[int, int, str, str], float]
+    predicted_bytes: Dict[Tuple[int, int, str, str], int]
+    improvement: float
+    cost_consistent: bool
+    pruned: Tuple[Tuple[int, int, str, str], ...] = ()
+
+    def to_dict(self) -> Dict:
+        key = lambda k: f"c_blk={k[0]},l={k[1]},layout={k[2]},gather={k[3]}"
+        return {
+            "choice": key(self.choice),
+            "baseline": key(self.baseline),
+            "measurements": {key(k): v for k, v in self.measurements.items()},
+            "predicted_bytes": {
+                key(k): v for k, v in self.predicted_bytes.items()
+            },
+            "improvement": self.improvement,
+            "cost_consistent": self.cost_consistent,
+            "pruned": [key(k) for k in self.pruned],
+        }
 
 
 def plan(
@@ -237,6 +313,8 @@ def plan(
             config = dataclasses.replace(config, l=sched.l)
         return GustPlan(config, sched=sched, cache=cache)
 
+    _source = None
+
     if isinstance(matrix, (np.ndarray, jax.Array)):
         dense = np.asarray(matrix)
         if dense.ndim != 2:
@@ -247,6 +325,7 @@ def plan(
             "plan() takes a dense (numpy or jax) array, a COOMatrix or a "
             f"GustSchedule; got {type(matrix).__name__}"
         )
+    _source = matrix  # kept on the plan so tune() can sweep l
     if cache is None:
         from .scheduler import schedule as _schedule
 
@@ -259,7 +338,7 @@ def plan(
             matrix, config.l, load_balance=config.load_balance,
             method=config.colorer,
         )
-    return GustPlan(config, sched=sched, cache=cache)
+    return GustPlan(config, sched=sched, cache=cache, source=_source)
 
 
 class GustPlan:
@@ -285,6 +364,7 @@ class GustPlan:
         cache: Optional[ScheduleCache] = None,
         mesh=None,
         axis: Optional[str] = None,
+        source: Optional[COOMatrix] = None,
     ):
         if sched is None and artifact is None:
             raise ValueError("a GustPlan needs a schedule or a packed artifact")
@@ -294,6 +374,8 @@ class GustPlan:
         self.mesh = mesh
         self.axis = axis
         self._artifact = artifact
+        self._source = source  # COO kept (when known) so tune() can sweep l
+        self.tuning: Optional[TuneResult] = None
 
     # -- identity ----------------------------------------------------------
 
@@ -364,6 +446,13 @@ class GustPlan:
             return self.config.interpret
         return jax.default_backend() != "tpu"
 
+    def _pipeline(self) -> str:
+        """Resolved streaming mode: the jnp backend has no tile pipeline
+        (``single``); on the kernel path ``auto`` means double-buffered."""
+        if not self._use_kernel():
+            return "single"
+        return "double" if self.config.pipeline == "auto" else self.config.pipeline
+
     # -- execution ---------------------------------------------------------
 
     def spmm(self, x: jnp.ndarray, *, transpose_io: bool = False) -> jnp.ndarray:
@@ -391,6 +480,7 @@ class GustPlan:
             c_blk=self.config.c_blk,
             transpose_io=transpose_io,
             gather=self.config.gather,
+            pipeline=self.config.pipeline,
         )
 
     def spmv(self, v: jnp.ndarray) -> jnp.ndarray:
@@ -490,6 +580,14 @@ class GustPlan:
         ragged = isinstance(arts[0], RaggedSchedule)
         if any(isinstance(a, RaggedSchedule) != ragged for a in arts):
             raise ValueError("cannot stack mixed padded/ragged layouts")
+        quant = arts[0].quantized
+        if any(a.quantized != quant for a in arts):
+            # the scale_blk leaf exists only on quantized artifacts, so a
+            # mixed stack has no common pytree structure
+            raise ValueError(
+                "cannot stack mixed quantized/unquantized layers: pack "
+                "every layer with the same value_dtype"
+            )
         if ragged:
             t_uniform = max(a.num_blocks for a in arts)
             arts = [a.repad_to_blocks(t_uniform) for a in arts]
@@ -576,7 +674,9 @@ class GustPlan:
             config,
             l=artifact.l,
             layout="ragged" if ragged else "padded",
-            c_blk=artifact.c_blk if ragged else (
+            # ragged streams and quantized streams (scales aligned to the
+            # pack-time blocks) execute at their pack-time c_blk only
+            c_blk=artifact.c_blk if (ragged or artifact.quantized) else (
                 c_blk if c_blk is not None else config.c_blk
             ),
             backend=backend if backend is not None else config.backend,
@@ -611,6 +711,142 @@ class GustPlan:
         return cls(
             dataclasses.replace(c, layout=layout), artifact=artifact
         )
+
+    # -- measured autotuning -------------------------------------------------
+
+    def tune(
+        self,
+        x_probe: jnp.ndarray,
+        *,
+        c_blks: Optional[Sequence[int]] = None,
+        ls: Optional[Sequence[int]] = None,
+        layouts: Sequence[str] = ("padded", "ragged"),
+        gathers: Sequence[str] = ("resident", "local"),
+        iters: int = 3,
+        warmup: int = 1,
+        min_improvement: Optional[float] = None,
+        prune_ratio: float = 4.0,
+    ) -> "GustPlan":
+        """Measure ``(c_blk, l, layout, gather)`` candidates against
+        ``x_probe`` and return a plan pinned to the winner.
+
+        This is the plan-time analogue of FFTW's ``MEASURE`` mode: the
+        sweep prices each candidate with :class:`PlanCost` first (anything
+        predicted to stream more than ``prune_ratio`` × the best
+        candidate's bytes is pruned untimed), times the surviving jitted
+        executors (best-of-``iters`` after ``warmup`` untimed calls), and
+        feeds the measurements through the one tuning decision point,
+        :func:`~repro.core.packing.resolve_tuning` — the fastest candidate
+        wins unless it fails to beat the static
+        ``resolve_layout``/``resolve_gather`` baseline by the margin, in
+        which case the baseline stands.  The returned plan carries the
+        full :class:`TuneResult` on ``.tuning``; its config spells every
+        swept knob explicitly (no ``auto``), so ``to_spec()`` round-trips
+        the tuned choice.
+
+        The winning choice is memoized content-keyed in the plan's
+        :class:`~repro.core.packing.ScheduleCache`, so re-tuning the same
+        matrix/probe reuses the recorded sweep instead of re-timing.
+
+        ``ls`` defaults to the plan's own ``l`` (plus ``l/2`` when the
+        plan still holds its source matrix — sweeping ``l`` means
+        re-scheduling, which only :func:`plan`-built plans can do).
+        """
+        import time
+
+        if self.sched is None:
+            raise ValueError(
+                "tune() needs the schedule; deserialized/spec plans carry "
+                "only the packed artifact"
+            )
+        if self.mesh is not None:
+            raise NotImplementedError("tune a plan before sharding it")
+        x_probe = jnp.asarray(x_probe)
+        if x_probe.ndim == 1:
+            x_probe = x_probe[:, None]
+        c = self.config
+        if c_blks is None:
+            c_blks = tuple(sorted({4, c.c_blk, 2 * c.c_blk}))
+        if ls is None:
+            ls = (
+                tuple(sorted({c.l, max(c.l // 2, 1)}, reverse=True))
+                if self._source is not None
+                else (c.l,)
+            )
+        baseline = (c.c_blk, c.l, self.layout, self.gather_mode)
+
+        def build(key: Tuple[int, int, str, str]) -> "GustPlan":
+            cb, l, layout, gather = key
+            cfg = dataclasses.replace(
+                c, c_blk=cb, l=l, layout=layout, gather=gather
+            )
+            if l == c.l:
+                return GustPlan(
+                    cfg, sched=self.sched, cache=self.cache,
+                    source=self._source,
+                )
+            return plan(self._source, cfg, cache=self.cache)
+
+        candidates = {baseline}
+        for cb in c_blks:
+            for l in ls:
+                if l != c.l and self._source is None:
+                    continue
+                for layout in layouts:
+                    for gather in gathers:
+                        candidates.add((int(cb), int(l), layout, gather))
+        candidates = sorted(candidates)
+
+        def sweep():
+            predicted, plans = {}, {}
+            for key in candidates:
+                p = build(key)
+                plans[key] = p
+                predicted[key] = int(p.cost().stream_bytes)
+            floor = min(predicted.values())
+            pruned = tuple(
+                k for k in candidates
+                if k != baseline and predicted[k] > prune_ratio * floor
+            )
+            measurements = {}
+            for key in candidates:
+                if key in pruned:
+                    continue
+                run = plans[key].spmm
+                for _ in range(max(warmup, 1)):
+                    jax.block_until_ready(run(x_probe))
+                best = float("inf")
+                for _ in range(max(iters, 1)):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(run(x_probe))
+                    best = min(best, time.perf_counter() - t0)
+                measurements[key] = best
+            choice = resolve_tuning(
+                measurements, baseline, min_improvement=min_improvement
+            )
+            return TuneResult(
+                choice=choice,
+                baseline=baseline,
+                measurements=measurements,
+                predicted_bytes=predicted,
+                improvement=measurements[baseline] / measurements[choice],
+                cost_consistent=predicted[choice] <= predicted[baseline],
+                pruned=pruned,
+            )
+
+        if self.cache is not None:
+            memo_key = (
+                "tune", self.cache.schedule_key(self.sched),
+                tuple(candidates), tuple(x_probe.shape), str(x_probe.dtype),
+                c.value_dtype, c.index_dtype, c.backend, self._interpret(),
+                iters, warmup, min_improvement, prune_ratio,
+            )
+            result = self.cache.memo(memo_key, sweep)
+        else:
+            result = sweep()
+        tuned = build(result.choice)
+        tuned.tuning = result
+        return tuned
 
     # -- cost ----------------------------------------------------------------
 
@@ -653,6 +889,14 @@ class GustPlan:
             gather_flops_local=4 * streamed * a.s_blk,
             x_vmem_bytes_resident=a.seg_count * self.l * 4,
             x_vmem_bytes_local=a.s_blk * self.l * 4,
+            backend="pallas" if self._use_kernel() else "jnp",
+            pipeline=self._pipeline(),
+            **{
+                f"cache_{k}": v
+                for k, v in (
+                    self.cache.stats() if self.cache is not None else {}
+                ).items()
+            },
         )
 
     def __repr__(self) -> str:

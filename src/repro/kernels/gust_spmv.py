@@ -39,11 +39,29 @@ inner ``S_blk`` dimension that walks the block's x tiles.  Dimension 1
 color block and accumulates across the rest, the Pallas analogue of the
 adders' integrate-then-dump (the "dump signal" is the final grid step).
 
-The scheduled stream (``m/col/row`` blocks) is what flows HBM->VMEM, tile
-by tile, double-buffered by the Pallas pipeline — exactly the paper's
-two-step Buffer Filler pipeline.  The lane-reversed x layout is derived
-*in-kernel* from the straight layout (``xs[:, ::-1, :]`` on the VMEM
-tile), so only one copy of x ever crosses HBM->VMEM.
+Double-buffered variants (PR 6).  The ``*_db`` builders collapse the
+reduction grid dimensions into an in-kernel ``fori_loop`` and overlap the
+fetch of step ``i+1`` with the accumulate of step ``i`` through manual
+async copies (:func:`pltpu.make_async_copy`) into a two-slot ping/pong
+VMEM scratch — the classic latency-hiding pipeline:
+
+  * :func:`make_gust_spmv_db` streams the **schedule block triple**
+    (m/col/row) from ANY-space memory, two ``(c_blk, l)`` tiles in
+    flight, x VMEM-resident;
+  * :func:`make_gust_spmv_local_db` keeps the schedule blocks
+    pipeline-managed and ping/pongs the **x tiles** the block references
+    (steered by the scalar-prefetched ``seg_blk`` table), with the
+    column decode hoisted out of the tile loop.
+
+Both are bit-identical to their single-buffered twins: the ``fori_loop``
+carry performs the same f32 additions in the same order as the revisited
+output tile / gather scratch.
+
+Quantized variants (PR 6).  Every builder takes ``quantized=True`` to
+accept an int8 value stream plus the pack-time per-block scale column
+``scale_blk.reshape(T_blk, 1)``: the dequant ``float32(q) * scale`` is
+fused into the accumulate (one extra VPU multiply per block), bit-exact
+with :func:`repro.kernels.ref.dequant_ref`.
 
 All arithmetic accumulates in f32 regardless of input dtype (MXU-native).
 """
@@ -60,8 +78,13 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = [
     "make_gust_spmv",
     "make_gust_spmv_local",
+    "make_gust_spmv_db",
+    "make_gust_spmv_local_db",
     "block_accumulate",
+    "block_math",
     "route_rows",
+    "decode_local_cols",
+    "local_tile_delta",
 ]
 
 
@@ -85,16 +108,13 @@ def route_rows(partial, row_blk, *, c_blk, l, b):
     )[None]  # (1, l, B)
 
 
-def block_accumulate(m_ref, col_ref, row_ref, xs_ref, *, l, seg_count,
-                     c_blk, b):
-    """Shared per-block math of the padded and ragged *resident* kernels:
-    fused Buffer-Filler gather + VPU multiply + one-hot routing matmul.
-    The lane-reversed x layout is derived in-kernel.  Returns the block's
-    (1, l, B) contribution to its window accumulator."""
-    m_blk = m_ref[...].astype(jnp.float32)  # (C_blk, l)
-    col_blk = col_ref[...].astype(jnp.int32)  # (C_blk, l) int
-    row_blk = row_ref[...].astype(jnp.int32)  # (C_blk, l) int
-    xs = xs_ref[...].astype(jnp.float32)  # (S, l, B) straight layout
+def block_math(m_blk, col_blk, row_blk, xs, *, l, seg_count, c_blk, b):
+    """Value-level core of the *resident* per-block math: fused
+    Buffer-Filler gather + VPU multiply + one-hot routing matmul, on
+    already-loaded (and already-dequantized) arrays.  ``m_blk`` is the
+    (C_blk, l) f32 value block, ``xs`` the (S, l, B) straight-layout x;
+    the lane-reversed layout is derived here.  Returns the block's
+    (1, l, B) f32 contribution to its window accumulator."""
     xf = xs[:, ::-1, :]  # (S, l, B) lane-reversed, derived in-kernel
 
     # ---- Buffer Filler: fused vector gather -----------------------------
@@ -127,26 +147,57 @@ def block_accumulate(m_ref, col_ref, row_ref, xs_ref, *, l, seg_count,
     return route_rows(partial, row_blk, c_blk=c_blk, l=l, b=b)
 
 
-def gather_local_step(col_ref, xt_ref, s, g_scr, *, l, c_blk):
-    """One segment-local gather step, shared by the padded and ragged
-    local kernels: accumulate into the (l, C_blk, B) scratch the
-    contribution of the single streamed x tile ``xt_ref`` (the block's
-    ``s``-th referenced segment).  ``col_ref`` holds the *block-local*
-    columns (``col_loc``): a slot contributes exactly when its local
-    segment id equals ``s``, so after ``S_blk`` steps the scratch equals
-    the resident kernel's ``x_sel`` bitwise (each slot's value is added
-    once, zeros otherwise)."""
-    col_loc = col_ref[...].astype(jnp.int32)  # (C_blk, l)
+def block_accumulate(m_ref, col_ref, row_ref, xs_ref, *, l, seg_count,
+                     c_blk, b, scale=None):
+    """Shared per-block math of the padded and ragged *resident* kernels,
+    reading from refs.  ``scale`` (scalar f32 or None) fuses the int8
+    dequant into the value load."""
+    m_blk = m_ref[...].astype(jnp.float32)  # (C_blk, l)
+    if scale is not None:
+        m_blk = m_blk * scale
+    return block_math(
+        m_blk,
+        col_ref[...].astype(jnp.int32),
+        row_ref[...].astype(jnp.int32),
+        xs_ref[...].astype(jnp.float32),
+        l=l, seg_count=seg_count, c_blk=c_blk, b=b,
+    )
+
+
+def decode_local_cols(col_loc, *, l, c_blk):
+    """Decode the block-local column block once per block (hoisted out of
+    the tile loop by the double-buffered local kernel): returns
+    ``(local_seg (C_blk, l) int32, fsel (l, C_blk, 1) f32)`` — the local
+    segment of every slot and its straight/flipped lane select."""
     local_seg = col_loc // l
     off = col_loc - local_seg * l
     lane = jax.lax.broadcasted_iota(jnp.int32, (c_blk, l), 1)
     flip = (off != lane).astype(jnp.float32)
-    tile = xt_ref[...].astype(jnp.float32)[0]  # (l, B) straight
+    return local_seg, flip.T[:, :, None]
+
+
+def local_tile_delta(local_seg, fsel, tile, s):
+    """Contribution of one streamed x tile to the (l, C_blk, B) gather
+    accumulator: a slot contributes exactly when its local segment id
+    equals ``s``.  ``tile`` is the (l, B) straight-layout tile; the
+    lane-reversed layout is derived here.  After all ``S_blk`` tiles the
+    accumulator equals the resident kernel's ``x_sel`` bitwise (each
+    slot's value added once, zeros otherwise)."""
     tile_rev = tile[::-1, :]  # lane-reversed, derived in-kernel
-    fsel = flip.T[:, :, None]  # (l, C_blk, 1)
     sel = tile[:, None, :] * (1.0 - fsel) + tile_rev[:, None, :] * fsel
     mask = (local_seg == s).astype(jnp.float32)  # (C_blk, l)
-    g_scr[...] += mask.T[:, :, None] * sel  # (l, C_blk, B)
+    return mask.T[:, :, None] * sel  # (l, C_blk, B)
+
+
+def gather_local_step(col_ref, xt_ref, s, g_scr, *, l, c_blk):
+    """One segment-local gather step, shared by the padded and ragged
+    local kernels: accumulate into the (l, C_blk, B) scratch the
+    contribution of the single streamed x tile ``xt_ref`` (the block's
+    ``s``-th referenced segment)."""
+    col_loc = col_ref[...].astype(jnp.int32)  # (C_blk, l)
+    local_seg, fsel = decode_local_cols(col_loc, l=l, c_blk=c_blk)
+    tile = xt_ref[...].astype(jnp.float32)[0]  # (l, B) straight
+    g_scr[...] += local_tile_delta(local_seg, fsel, tile, s)
 
 
 def _kernel(m_ref, col_ref, row_ref, xs_ref, y_ref, *, l, seg_count, c_blk,
@@ -155,6 +206,23 @@ def _kernel(m_ref, col_ref, row_ref, xs_ref, y_ref, *, l, seg_count, c_blk,
     acc = block_accumulate(
         m_ref, col_ref, row_ref, xs_ref,
         l=l, seg_count=seg_count, c_blk=c_blk, b=b,
+    )
+
+    @pl.when(cb == 0)
+    def _init():
+        y_ref[...] = acc
+
+    @pl.when(cb != 0)
+    def _accum():
+        y_ref[...] += acc
+
+
+def _kernel_q(m_ref, col_ref, row_ref, scale_ref, xs_ref, y_ref, *, l,
+              seg_count, c_blk, b):
+    cb = pl.program_id(1)
+    acc = block_accumulate(
+        m_ref, col_ref, row_ref, xs_ref,
+        l=l, seg_count=seg_count, c_blk=c_blk, b=b, scale=scale_ref[0, 0],
     )
 
     @pl.when(cb == 0)
@@ -176,6 +244,7 @@ def make_gust_spmv(
     *,
     c_blk: int = 8,
     interpret: bool = True,
+    quantized: bool = False,
 ):
     """Build the resident-gather pallas_call for a fixed packed-schedule
     geometry.
@@ -192,6 +261,10 @@ def make_gust_spmv(
         residency;
       * y: one (1, l, B) accumulator tile per window, revisited across the
         color-block (reduction) grid dimension.
+
+    With ``quantized=True`` the returned function takes the per-block
+    scale column ``scale_blk.reshape(T_blk, 1)`` between the row block
+    and x: ``fn(m_blk, col_blk, row_blk, scale2d, xs)``.
     """
     if c_pad % c_blk:
         raise ValueError("c_pad must be a multiple of c_blk")
@@ -204,17 +277,45 @@ def make_gust_spmv(
     x_spec = pl.BlockSpec((seg_count, l, b), lambda w, cb: (0, 0, 0))
     out_spec = pl.BlockSpec((1, l, b), lambda w, cb: (w, 0, 0))
 
+    in_specs = [sched_spec, sched_spec, sched_spec]
+    if quantized:
+        in_specs.append(
+            pl.BlockSpec((1, 1), lambda w, cb: (w * num_cb + cb, 0))
+        )
+    in_specs.append(x_spec)
     kernel = functools.partial(
-        _kernel, l=l, seg_count=seg_count, c_blk=c_blk, b=b
+        _kernel_q if quantized else _kernel,
+        l=l, seg_count=seg_count, c_blk=c_blk, b=b,
     )
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[sched_spec, sched_spec, sched_spec, x_spec],
+        in_specs=in_specs,
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((num_windows, l, b), jnp.float32),
         interpret=interpret,
     )
+
+
+def _local_flush(m_ref, row_ref, g, y_ref, first, *, l, c_blk, b, scale):
+    """Shared flush of the single-buffered local kernels: dequant (when
+    quantized) + VPU multiply of the gathered block + routing matmul,
+    then init-or-accumulate the window tile."""
+    m_blk = m_ref[...].astype(jnp.float32)  # (C_blk, l)
+    if scale is not None:
+        m_blk = m_blk * scale
+    partial = m_blk.T[:, :, None] * g  # (l, C_blk, B)
+    acc = route_rows(
+        partial, row_ref[...].astype(jnp.int32), c_blk=c_blk, l=l, b=b
+    )
+
+    @pl.when(first)
+    def _init():
+        y_ref[...] = acc
+
+    @pl.when(jnp.logical_not(first))
+    def _accum():
+        y_ref[...] += acc
 
 
 def _local_kernel(seg_ref, m_ref, col_ref, row_ref, xt_ref, y_ref, g_scr,
@@ -229,20 +330,24 @@ def _local_kernel(seg_ref, m_ref, col_ref, row_ref, xt_ref, y_ref, g_scr,
 
     @pl.when(s == s_blk - 1)
     def _flush():
-        m_blk = m_ref[...].astype(jnp.float32)  # (C_blk, l)
-        partial = m_blk.T[:, :, None] * g_scr[...]  # (l, C_blk, B)
-        acc = route_rows(
-            partial, row_ref[...].astype(jnp.int32),
-            c_blk=c_blk, l=l, b=b,
-        )
+        _local_flush(m_ref, row_ref, g_scr[...], y_ref, cb == 0,
+                     l=l, c_blk=c_blk, b=b, scale=None)
 
-        @pl.when(cb == 0)
-        def _init():
-            y_ref[...] = acc
 
-        @pl.when(cb != 0)
-        def _accum():
-            y_ref[...] += acc
+def _local_kernel_q(seg_ref, m_ref, col_ref, row_ref, scale_ref, xt_ref,
+                    y_ref, g_scr, *, l, s_blk, c_blk, b):
+    cb, s = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _zero():
+        g_scr[...] = jnp.zeros_like(g_scr)
+
+    gather_local_step(col_ref, xt_ref, s, g_scr, l=l, c_blk=c_blk)
+
+    @pl.when(s == s_blk - 1)
+    def _flush():
+        _local_flush(m_ref, row_ref, g_scr[...], y_ref, cb == 0,
+                     l=l, c_blk=c_blk, b=b, scale=scale_ref[0, 0])
 
 
 @functools.lru_cache(maxsize=256)
@@ -255,6 +360,7 @@ def make_gust_spmv_local(
     *,
     c_blk: int = 8,
     interpret: bool = True,
+    quantized: bool = False,
 ):
     """Build the segment-local pallas_call for a padded-schedule geometry.
 
@@ -264,7 +370,9 @@ def make_gust_spmv_local(
     (scalar-prefetched: it steers the x-tile pipeline before each body
     runs), ``col_loc`` holds the block-local columns, and ``xs`` is the
     straight-layout x ``(seg_count, l, B)`` — which stays in HBM-sized
-    memory; only one (1, l, B) tile is in VMEM per grid step.
+    memory; only one (1, l, B) tile is in VMEM per grid step.  With
+    ``quantized=True`` the scale column ``scale_blk.reshape(T_blk, 1)``
+    is inserted after the row block.
 
     Grid ``(num_windows, c_pad/c_blk, S_blk)``: the inner dimension walks
     the ``S_blk`` x tiles the block references (``seg_flat[t*S_blk+s]``),
@@ -288,15 +396,278 @@ def make_gust_spmv_local(
     )
     out_spec = pl.BlockSpec((1, l, b), lambda w, cb, s, seg: (w, 0, 0))
 
+    in_specs = [sched_spec, sched_spec, sched_spec]
+    if quantized:
+        in_specs.append(
+            pl.BlockSpec((1, 1), lambda w, cb, s, seg: (w * num_cb + cb, 0))
+        )
+    in_specs.append(x_spec)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[sched_spec, sched_spec, sched_spec, x_spec],
+        in_specs=in_specs,
         out_specs=out_spec,
         scratch_shapes=[pltpu.VMEM((l, c_blk, b), jnp.float32)],
     )
     kernel = functools.partial(
-        _local_kernel, l=l, s_blk=s_blk, c_blk=c_blk, b=b
+        _local_kernel_q if quantized else _local_kernel,
+        l=l, s_blk=s_blk, c_blk=c_blk, b=b,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_windows, l, b), jnp.float32),
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered variants: manual async-copy ping/pong pipelines.
+# ---------------------------------------------------------------------------
+
+
+def stream_copy(src_ref, scr_ref, sem, slot, start_row, rows):
+    """Async-copy descriptor for one stream tile: rows
+    ``start_row : start_row + rows`` of ``src_ref`` (ANY-space) into slot
+    ``slot`` of the (2, rows, ...) ping/pong scratch, tracked by the
+    (already slot-indexed) DMA semaphore ``sem``.  ``.start()`` on the
+    descriptor kicks the DMA; an identically-constructed descriptor's
+    ``.wait()`` blocks on its completion."""
+    return pltpu.make_async_copy(
+        src_ref.at[pl.ds(start_row, rows)],
+        scr_ref.at[slot],
+        sem,
+    )
+
+
+def _db_kernel(m_ref, col_ref, row_ref, xs_ref, y_ref,
+               m_scr, col_scr, row_scr, sems,
+               *, l, seg_count, c_blk, num_cb, b, scale_ref=None):
+    """Double-buffered resident kernel body: grid (W,), the color-block
+    reduction runs as an in-kernel fori_loop whose ping/pong scratch
+    holds two schedule block triples — the DMA of triple ``i+1`` overlaps
+    the gather/multiply/route of triple ``i``.  The f32 additions happen
+    in the same order as the single-buffered kernel's revisited output
+    tile, so the result is bitwise identical."""
+    w = pl.program_id(0)
+
+    def copies(slot, blk):
+        start = (w * num_cb + blk) * c_blk
+        return (
+            stream_copy(m_ref, m_scr, sems.at[slot, 0], slot, start, c_blk),
+            stream_copy(col_ref, col_scr, sems.at[slot, 1], slot, start,
+                        c_blk),
+            stream_copy(row_ref, row_scr, sems.at[slot, 2], slot, start,
+                        c_blk),
+        )
+
+    for c in copies(0, 0):
+        c.start()
+
+    def body(i, acc):
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when(i + 1 < num_cb)
+        def _prefetch():
+            for c in copies(1 - slot, i + 1):
+                c.start()
+
+        for c in copies(slot, i):
+            c.wait()
+        m_blk = m_scr[slot].astype(jnp.float32)
+        if scale_ref is not None:
+            m_blk = m_blk * scale_ref[w * num_cb + i, 0]
+        return acc + block_math(
+            m_blk,
+            col_scr[slot].astype(jnp.int32),
+            row_scr[slot].astype(jnp.int32),
+            xs_ref[...].astype(jnp.float32),
+            l=l, seg_count=seg_count, c_blk=c_blk, b=b,
+        )
+
+    y_ref[...] = jax.lax.fori_loop(
+        0, num_cb, body, jnp.zeros((1, l, b), jnp.float32)
+    )
+
+
+def _db_kernel_q(m_ref, col_ref, row_ref, scale_ref, xs_ref, y_ref,
+                 m_scr, col_scr, row_scr, sems, *, l, seg_count, c_blk,
+                 num_cb, b):
+    _db_kernel(
+        m_ref, col_ref, row_ref, xs_ref, y_ref, m_scr, col_scr, row_scr,
+        sems, l=l, seg_count=seg_count, c_blk=c_blk, num_cb=num_cb, b=b,
+        scale_ref=scale_ref,
+    )
+
+
+@functools.lru_cache(maxsize=256)
+def make_gust_spmv_db(
+    num_windows: int,
+    c_pad: int,
+    l: int,
+    seg_count: int,
+    b: int,
+    *,
+    c_blk: int = 8,
+    interpret: bool = True,
+    quantized: bool = False,
+    value_dtype: str = "float32",
+    index_dtype: str = "int32",
+):
+    """Double-buffered twin of :func:`make_gust_spmv`: same call
+    signature and bitwise-identical output, but the schedule stream
+    (m/col/row) is fetched by manual async copies into a two-slot
+    ping/pong scratch so the DMA of color block ``i+1`` overlaps the
+    math of block ``i``, and the whole per-window reduction runs in one
+    grid step (grid ``(W,)`` instead of ``(W, num_cb)``).
+
+    The scratch dtypes must match the operands, so the builder takes the
+    stream's ``value_dtype``/``index_dtype`` names (the geometry memo now
+    includes them).  When ``quantized``, the (T_blk, 1) scale column is
+    small enough to sit whole in VMEM and is indexed per block inside the
+    loop."""
+    if c_pad % c_blk:
+        raise ValueError("c_pad must be a multiple of c_blk")
+    num_cb = c_pad // c_blk
+    t_blk = num_windows * num_cb
+    vdt, idt = jnp.dtype(value_dtype), jnp.dtype(index_dtype)
+
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    in_specs = [any_spec, any_spec, any_spec]
+    if quantized:
+        in_specs.append(pl.BlockSpec((t_blk, 1), lambda w: (0, 0)))
+    in_specs.append(pl.BlockSpec((seg_count, l, b), lambda w: (0, 0, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(num_windows,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, l, b), lambda w: (w, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, c_blk, l), vdt),
+            pltpu.VMEM((2, c_blk, l), idt),
+            pltpu.VMEM((2, c_blk, l), idt),
+            pltpu.SemaphoreType.DMA((2, 3)),
+        ],
+    )
+    kernel = functools.partial(
+        _db_kernel_q if quantized else _db_kernel,
+        l=l, seg_count=seg_count, c_blk=c_blk, num_cb=num_cb, b=b,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_windows, l, b), jnp.float32),
+        interpret=interpret,
+    )
+
+
+def _local_db_body(seg_ref, m_ref, col_ref, row_ref, xs_ref, y_ref,
+                   xt_scr, sems, t, first, *, l, s_blk, c_blk, b, scale):
+    """Shared double-buffered segment-local block: ping/pong the S_blk x
+    tiles of stream block ``t`` (``seg_ref[t*s_blk + s]`` steers each
+    copy), accumulating the gathered block in a fori_loop carry — the
+    same f32 additions, in the same order, as the single-buffered
+    kernel's gather scratch.  The column decode is hoisted out of the
+    tile loop (one decode per block instead of one per tile)."""
+
+    def copy(slot, s):
+        return stream_copy(
+            xs_ref, xt_scr, sems.at[slot], slot, seg_ref[t * s_blk + s], 1
+        )
+
+    copy(0, 0).start()
+    local_seg, fsel = decode_local_cols(
+        col_ref[...].astype(jnp.int32), l=l, c_blk=c_blk
+    )
+
+    def body(s, g):
+        slot = jax.lax.rem(s, 2)
+
+        @pl.when(s + 1 < s_blk)
+        def _prefetch():
+            copy(1 - slot, s + 1).start()
+
+        copy(slot, s).wait()
+        tile = xt_scr[slot].astype(jnp.float32)[0]  # (l, B)
+        return g + local_tile_delta(local_seg, fsel, tile, s)
+
+    g = jax.lax.fori_loop(
+        0, s_blk, body, jnp.zeros((l, c_blk, b), jnp.float32)
+    )
+    _local_flush(m_ref, row_ref, g, y_ref, first,
+                 l=l, c_blk=c_blk, b=b, scale=scale)
+
+
+def _local_db_kernel(seg_ref, m_ref, col_ref, row_ref, xs_ref, y_ref,
+                     xt_scr, sems, *, l, s_blk, c_blk, num_cb, b):
+    w, cb = pl.program_id(0), pl.program_id(1)
+    _local_db_body(seg_ref, m_ref, col_ref, row_ref, xs_ref, y_ref,
+                   xt_scr, sems, w * num_cb + cb, cb == 0,
+                   l=l, s_blk=s_blk, c_blk=c_blk, b=b, scale=None)
+
+
+def _local_db_kernel_q(seg_ref, m_ref, col_ref, row_ref, scale_ref, xs_ref,
+                       y_ref, xt_scr, sems, *, l, s_blk, c_blk, num_cb, b):
+    w, cb = pl.program_id(0), pl.program_id(1)
+    _local_db_body(seg_ref, m_ref, col_ref, row_ref, xs_ref, y_ref,
+                   xt_scr, sems, w * num_cb + cb, cb == 0,
+                   l=l, s_blk=s_blk, c_blk=c_blk, b=b,
+                   scale=scale_ref[0, 0])
+
+
+@functools.lru_cache(maxsize=256)
+def make_gust_spmv_local_db(
+    num_windows: int,
+    c_pad: int,
+    l: int,
+    s_blk: int,
+    b: int,
+    *,
+    c_blk: int = 8,
+    interpret: bool = True,
+    quantized: bool = False,
+    x_dtype: str = "float32",
+):
+    """Double-buffered twin of :func:`make_gust_spmv_local`: same call
+    signature and bitwise-identical output.  The schedule blocks stay
+    pipeline-managed (one (c_blk, l) triple per grid step), x lives in
+    ANY-space memory, and the block's ``S_blk`` referenced tiles are
+    fetched by manual async copies into a two-slot ping/pong scratch —
+    the fetch of tile ``s+1`` overlaps the gather of tile ``s``, and the
+    ``S_blk`` inner grid dimension collapses into the kernel (grid
+    ``(W, num_cb)`` instead of ``(W, num_cb, S_blk)``), which also hoists
+    the column decode and the flush's scratch round-trip out of the tile
+    loop."""
+    if c_pad % c_blk:
+        raise ValueError("c_pad must be a multiple of c_blk")
+    num_cb = c_pad // c_blk
+    grid = (num_windows, num_cb)
+    xdt = jnp.dtype(x_dtype)
+
+    sched_spec = pl.BlockSpec(
+        (c_blk, l), lambda w, cb, seg: (w * num_cb + cb, 0)
+    )
+    in_specs = [sched_spec, sched_spec, sched_spec]
+    if quantized:
+        in_specs.append(
+            pl.BlockSpec((1, 1), lambda w, cb, seg: (w * num_cb + cb, 0))
+        )
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, l, b), lambda w, cb, seg: (w, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, 1, l, b), xdt),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    kernel = functools.partial(
+        _local_db_kernel_q if quantized else _local_db_kernel,
+        l=l, s_blk=s_blk, c_blk=c_blk, num_cb=num_cb, b=b,
     )
     return pl.pallas_call(
         kernel,

@@ -35,6 +35,23 @@ modes (shared math in :mod:`repro.kernels.gust_spmv`):
     inner ``S_blk`` grid dimension that streams only the x tiles block
     ``t`` references, shrinking per-block gather work from O(seg_count)
     to O(S_blk) and x VMEM residency to a single (1, l, B) tile.
+
+Double-buffered variants (PR 6), bitwise-identical to their
+single-buffered twins (same f32 additions in the same order):
+
+  * :func:`make_gust_spmv_ragged_db`: grid ``(W,)``; each window walks
+    its own block range ``block_starts[w]:block_starts[w+1]`` in an
+    in-kernel fori_loop, ping/ponging the schedule block triple through
+    manual async copies so the DMA of block ``t+1`` overlaps the math of
+    block ``t`` (``block_window`` is not needed — the window IS the grid
+    step);
+  * :func:`make_gust_spmv_ragged_local_db`: grid ``(num_blocks,)``; the
+    ``S_blk`` x tiles of each block ping/pong through VMEM scratch with
+    the column decode hoisted out of the tile loop.
+
+Every builder takes ``quantized=True`` to accept an int8 value stream
+plus the per-block scale column ``scale_blk.reshape(T_blk, 1)`` (dequant
+fused into the accumulate — see ``gust_spmv.py``).
 """
 
 from __future__ import annotations
@@ -46,28 +63,50 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .gust_spmv import block_accumulate, gather_local_step, route_rows
+from .gust_spmv import (
+    _local_flush,
+    block_accumulate,
+    block_math,
+    decode_local_cols,
+    gather_local_step,
+    local_tile_delta,
+    stream_copy,
+)
 
-__all__ = ["make_gust_spmv_ragged", "make_gust_spmv_ragged_local"]
+__all__ = [
+    "make_gust_spmv_ragged",
+    "make_gust_spmv_ragged_local",
+    "make_gust_spmv_ragged_db",
+    "make_gust_spmv_ragged_local_db",
+]
+
+
+def _accumulate_out(y_ref, acc, first):
+    @pl.when(first)
+    def _init():
+        y_ref[...] = acc
+
+    @pl.when(jnp.logical_not(first))
+    def _accum():
+        y_ref[...] += acc
 
 
 def _kernel(bw_ref, bs_ref, m_ref, col_ref, row_ref, xs_ref, y_ref,
-            *, l, seg_count, c_blk, b):
+            *, l, seg_count, c_blk, b, scale_ref=None):
     t = pl.program_id(0)
     w = bw_ref[t]
     acc = block_accumulate(
         m_ref, col_ref, row_ref, xs_ref,
         l=l, seg_count=seg_count, c_blk=c_blk, b=b,
+        scale=None if scale_ref is None else scale_ref[0, 0],
     )
-    is_first = t == bs_ref[w]
+    _accumulate_out(y_ref, acc, t == bs_ref[w])
 
-    @pl.when(is_first)
-    def _init():
-        y_ref[...] = acc
 
-    @pl.when(jnp.logical_not(is_first))
-    def _accum():
-        y_ref[...] += acc
+def _kernel_q(bw_ref, bs_ref, m_ref, col_ref, row_ref, scale_ref, xs_ref,
+              y_ref, *, l, seg_count, c_blk, b):
+    _kernel(bw_ref, bs_ref, m_ref, col_ref, row_ref, xs_ref, y_ref,
+            l=l, seg_count=seg_count, c_blk=c_blk, b=b, scale_ref=scale_ref)
 
 
 @functools.lru_cache(maxsize=256)
@@ -80,6 +119,7 @@ def make_gust_spmv_ragged(
     *,
     c_blk: int = 8,
     interpret: bool = True,
+    quantized: bool = False,
 ):
     """Build the resident-gather scalar-prefetch pallas_call for a
     ragged-stream geometry.
@@ -89,7 +129,8 @@ def make_gust_spmv_ragged(
     with the stream blocks ``(num_blocks * c_blk, l)`` and the straight
     x layout ``(seg_count, l, b)`` (the lane-reversed layout is derived
     in-kernel); returns ``(num_windows, l, b)`` f32 per-window
-    accumulators.
+    accumulators.  With ``quantized=True`` the scale column
+    ``scale_blk.reshape(T_blk, 1)`` is inserted after the row block.
 
     BlockSpecs:
       * schedule stream (m/col/row): HBM -> VMEM tiles of (c_blk, l), one
@@ -105,14 +146,19 @@ def make_gust_spmv_ragged(
     x_spec = pl.BlockSpec((seg_count, l, b), lambda t, bw, bs: (0, 0, 0))
     out_spec = pl.BlockSpec((1, l, b), lambda t, bw, bs: (bw[t], 0, 0))
 
+    in_specs = [sched_spec, sched_spec, sched_spec]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1), lambda t, bw, bs: (t, 0)))
+    in_specs.append(x_spec)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[sched_spec, sched_spec, sched_spec, x_spec],
+        in_specs=in_specs,
         out_specs=out_spec,
     )
     kernel = functools.partial(
-        _kernel, l=l, seg_count=seg_count, c_blk=c_blk, b=b
+        _kernel_q if quantized else _kernel,
+        l=l, seg_count=seg_count, c_blk=c_blk, b=b,
     )
     return pl.pallas_call(
         kernel,
@@ -123,7 +169,7 @@ def make_gust_spmv_ragged(
 
 
 def _local_kernel(bw_ref, bs_ref, seg_ref, m_ref, col_ref, row_ref, xt_ref,
-                  y_ref, g_scr, *, l, s_blk, c_blk, b):
+                  y_ref, g_scr, *, l, s_blk, c_blk, b, scale_ref=None):
     t, s = pl.program_id(0), pl.program_id(1)
     w = bw_ref[t]
 
@@ -135,20 +181,18 @@ def _local_kernel(bw_ref, bs_ref, seg_ref, m_ref, col_ref, row_ref, xt_ref,
 
     @pl.when(s == s_blk - 1)
     def _flush():
-        m_blk = m_ref[...].astype(jnp.float32)  # (C_blk, l)
-        partial = m_blk.T[:, :, None] * g_scr[...]  # (l, C_blk, B)
-        acc = route_rows(
-            partial, row_ref[...].astype(jnp.int32), c_blk=c_blk, l=l, b=b
+        _local_flush(
+            m_ref, row_ref, g_scr[...], y_ref, t == bs_ref[w],
+            l=l, c_blk=c_blk, b=b,
+            scale=None if scale_ref is None else scale_ref[0, 0],
         )
-        is_first = t == bs_ref[w]
 
-        @pl.when(is_first)
-        def _init():
-            y_ref[...] = acc
 
-        @pl.when(jnp.logical_not(is_first))
-        def _accum():
-            y_ref[...] += acc
+def _local_kernel_q(bw_ref, bs_ref, seg_ref, m_ref, col_ref, row_ref,
+                    scale_ref, xt_ref, y_ref, g_scr, *, l, s_blk, c_blk, b):
+    _local_kernel(bw_ref, bs_ref, seg_ref, m_ref, col_ref, row_ref, xt_ref,
+                  y_ref, g_scr, l=l, s_blk=s_blk, c_blk=c_blk, b=b,
+                  scale_ref=scale_ref)
 
 
 @functools.lru_cache(maxsize=256)
@@ -161,6 +205,7 @@ def make_gust_spmv_ragged_local(
     *,
     c_blk: int = 8,
     interpret: bool = True,
+    quantized: bool = False,
 ):
     """Build the segment-local scalar-prefetch pallas_call for a
     ragged-stream geometry.
@@ -169,10 +214,11 @@ def make_gust_spmv_ragged_local(
     ``fn(block_window, block_starts, seg_flat, m_blk, col_loc, row_blk,
     xs)`` — ``seg_flat`` is the pack-time segment table flattened to
     ``(T_blk * S_blk,)`` int32 and ``col_loc`` the block-local columns.
-    Grid ``(num_blocks, S_blk)``: the inner dimension streams the x tile
-    of segment ``seg_flat[t*S_blk + s]`` (one (1, l, B) tile in VMEM per
-    step), the gathered block accumulates in VMEM scratch, and the
-    multiply + routing matmul fire on the last tile.  Combines the
+    With ``quantized=True`` the scale column is inserted after the row
+    block.  Grid ``(num_blocks, S_blk)``: the inner dimension streams the
+    x tile of segment ``seg_flat[t*S_blk + s]`` (one (1, l, B) tile in
+    VMEM per step), the gathered block accumulates in VMEM scratch, and
+    the multiply + routing matmul fire on the last tile.  Combines the
     ragged stream's "no dead padding cycles" with the segment-local
     gather's O(S_blk) per-block cost — the full GUST utilization story.
     """
@@ -185,15 +231,240 @@ def make_gust_spmv_ragged_local(
         (1, l, b), lambda t, s, bw, bs, seg: (bw[t], 0, 0)
     )
 
+    in_specs = [sched_spec, sched_spec, sched_spec]
+    if quantized:
+        in_specs.append(
+            pl.BlockSpec((1, 1), lambda t, s, bw, bs, seg: (t, 0))
+        )
+    in_specs.append(x_spec)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
-        in_specs=[sched_spec, sched_spec, sched_spec, x_spec],
+        in_specs=in_specs,
         out_specs=out_spec,
         scratch_shapes=[pltpu.VMEM((l, c_blk, b), jnp.float32)],
     )
     kernel = functools.partial(
-        _local_kernel, l=l, s_blk=s_blk, c_blk=c_blk, b=b
+        _local_kernel_q if quantized else _local_kernel,
+        l=l, s_blk=s_blk, c_blk=c_blk, b=b,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_windows, l, b), jnp.float32),
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered variants.
+# ---------------------------------------------------------------------------
+
+
+def _db_kernel(bs_ref, m_ref, col_ref, row_ref, xs_ref, y_ref,
+               m_scr, col_scr, row_scr, sems,
+               *, l, seg_count, c_blk, b, scale_ref=None):
+    """Grid (W,): window ``w`` walks its own ragged block range in a
+    fori_loop, the schedule block triple double-buffered through manual
+    async copies.  Same f32 additions in the same order as the
+    single-buffered ragged kernel's revisited accumulator tile —
+    bitwise identical."""
+    w = pl.program_id(0)
+    t0 = bs_ref[w]
+    count = bs_ref[w + 1] - t0
+
+    def copies(slot, t):
+        start = t * c_blk
+        return (
+            stream_copy(m_ref, m_scr, sems.at[slot, 0], slot, start, c_blk),
+            stream_copy(col_ref, col_scr, sems.at[slot, 1], slot, start,
+                        c_blk),
+            stream_copy(row_ref, row_scr, sems.at[slot, 2], slot, start,
+                        c_blk),
+        )
+
+    for c in copies(0, t0):
+        c.start()
+
+    def body(i, acc):
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when(i + 1 < count)
+        def _prefetch():
+            for c in copies(1 - slot, t0 + i + 1):
+                c.start()
+
+        for c in copies(slot, t0 + i):
+            c.wait()
+        m_blk = m_scr[slot].astype(jnp.float32)
+        if scale_ref is not None:
+            m_blk = m_blk * scale_ref[t0 + i, 0]
+        return acc + block_math(
+            m_blk,
+            col_scr[slot].astype(jnp.int32),
+            row_scr[slot].astype(jnp.int32),
+            xs_ref[...].astype(jnp.float32),
+            l=l, seg_count=seg_count, c_blk=c_blk, b=b,
+        )
+
+    y_ref[...] = jax.lax.fori_loop(
+        0, count, body, jnp.zeros((1, l, b), jnp.float32)
+    )
+
+
+def _db_kernel_q(bs_ref, m_ref, col_ref, row_ref, scale_ref, xs_ref, y_ref,
+                 m_scr, col_scr, row_scr, sems, *, l, seg_count, c_blk, b):
+    _db_kernel(bs_ref, m_ref, col_ref, row_ref, xs_ref, y_ref,
+               m_scr, col_scr, row_scr, sems,
+               l=l, seg_count=seg_count, c_blk=c_blk, b=b,
+               scale_ref=scale_ref)
+
+
+@functools.lru_cache(maxsize=256)
+def make_gust_spmv_ragged_db(
+    num_blocks: int,
+    num_windows: int,
+    l: int,
+    seg_count: int,
+    b: int,
+    *,
+    c_blk: int = 8,
+    interpret: bool = True,
+    quantized: bool = False,
+    value_dtype: str = "float32",
+    index_dtype: str = "int32",
+):
+    """Double-buffered twin of :func:`make_gust_spmv_ragged`, grid
+    ``(W,)``.  Call signature:
+    ``fn(block_starts, m_blk, col_blk, row_blk, [scale2d,] xs)`` —
+    ``block_window`` is not needed (the window is the grid step; its
+    block range comes from ``block_starts`` alone).  The schedule stream
+    lives in ANY-space memory and ping/pongs through VMEM scratch sized
+    at the stream's actual dtypes; when quantized the (T_blk, 1) scale
+    column sits whole in VMEM."""
+    vdt, idt = jnp.dtype(value_dtype), jnp.dtype(index_dtype)
+
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    in_specs = [any_spec, any_spec, any_spec]
+    if quantized:
+        in_specs.append(pl.BlockSpec((num_blocks, 1), lambda w, bs: (0, 0)))
+    in_specs.append(
+        pl.BlockSpec((seg_count, l, b), lambda w, bs: (0, 0, 0))
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_windows,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, l, b), lambda w, bs: (w, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, c_blk, l), vdt),
+            pltpu.VMEM((2, c_blk, l), idt),
+            pltpu.VMEM((2, c_blk, l), idt),
+            pltpu.SemaphoreType.DMA((2, 3)),
+        ],
+    )
+    kernel = functools.partial(
+        _db_kernel_q if quantized else _db_kernel,
+        l=l, seg_count=seg_count, c_blk=c_blk, b=b,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_windows, l, b), jnp.float32),
+        interpret=interpret,
+    )
+
+
+def _local_db_kernel(bw_ref, bs_ref, seg_ref, m_ref, col_ref, row_ref,
+                     xs_ref, y_ref, xt_scr, sems,
+                     *, l, s_blk, c_blk, b, scale_ref=None):
+    """Grid (num_blocks,): schedule blocks pipeline-managed, the block's
+    S_blk x tiles double-buffered through manual async copies with the
+    column decode hoisted out of the tile loop (the ragged twin of the
+    padded ``_local_db_kernel``)."""
+    t = pl.program_id(0)
+    w = bw_ref[t]
+
+    def copy(slot, s):
+        return stream_copy(
+            xs_ref, xt_scr, sems.at[slot], slot, seg_ref[t * s_blk + s], 1
+        )
+
+    copy(0, 0).start()
+    local_seg, fsel = decode_local_cols(
+        col_ref[...].astype(jnp.int32), l=l, c_blk=c_blk
+    )
+
+    def body(s, g):
+        slot = jax.lax.rem(s, 2)
+
+        @pl.when(s + 1 < s_blk)
+        def _prefetch():
+            copy(1 - slot, s + 1).start()
+
+        copy(slot, s).wait()
+        tile = xt_scr[slot].astype(jnp.float32)[0]  # (l, B)
+        return g + local_tile_delta(local_seg, fsel, tile, s)
+
+    g = jax.lax.fori_loop(
+        0, s_blk, body, jnp.zeros((l, c_blk, b), jnp.float32)
+    )
+    _local_flush(
+        m_ref, row_ref, g, y_ref, t == bs_ref[w],
+        l=l, c_blk=c_blk, b=b,
+        scale=None if scale_ref is None else scale_ref[0, 0],
+    )
+
+
+def _local_db_kernel_q(bw_ref, bs_ref, seg_ref, m_ref, col_ref, row_ref,
+                       scale_ref, xs_ref, y_ref, xt_scr, sems,
+                       *, l, s_blk, c_blk, b):
+    _local_db_kernel(bw_ref, bs_ref, seg_ref, m_ref, col_ref, row_ref,
+                     xs_ref, y_ref, xt_scr, sems,
+                     l=l, s_blk=s_blk, c_blk=c_blk, b=b,
+                     scale_ref=scale_ref)
+
+
+@functools.lru_cache(maxsize=256)
+def make_gust_spmv_ragged_local_db(
+    num_blocks: int,
+    num_windows: int,
+    l: int,
+    s_blk: int,
+    b: int,
+    *,
+    c_blk: int = 8,
+    interpret: bool = True,
+    quantized: bool = False,
+    x_dtype: str = "float32",
+):
+    """Double-buffered twin of :func:`make_gust_spmv_ragged_local`: same
+    call signature and bitwise-identical output, grid ``(num_blocks,)``
+    (the ``S_blk`` inner dimension collapses into the kernel).  x lives
+    in ANY-space memory; the block's referenced tiles ping/pong through
+    a two-slot VMEM scratch so the fetch of tile ``s+1`` overlaps the
+    gather of tile ``s``."""
+    xdt = jnp.dtype(x_dtype)
+    sched_spec = pl.BlockSpec((c_blk, l), lambda t, bw, bs, seg: (t, 0))
+    in_specs = [sched_spec, sched_spec, sched_spec]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1), lambda t, bw, bs, seg: (t, 0)))
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(num_blocks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, l, b), lambda t, bw, bs, seg: (bw[t], 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, 1, l, b), xdt),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    kernel = functools.partial(
+        _local_db_kernel_q if quantized else _local_db_kernel,
+        l=l, s_blk=s_blk, c_blk=c_blk, b=b,
     )
     return pl.pallas_call(
         kernel,

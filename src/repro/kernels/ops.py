@@ -34,10 +34,17 @@ from repro.core.packing import (
     resolve_gather,
 )
 
-from .gust_spmv import make_gust_spmv, make_gust_spmv_local
+from .gust_spmv import (
+    make_gust_spmv,
+    make_gust_spmv_db,
+    make_gust_spmv_local,
+    make_gust_spmv_local_db,
+)
 from .gust_spmv_ragged import (
     make_gust_spmv_ragged,
+    make_gust_spmv_ragged_db,
     make_gust_spmv_ragged_local,
+    make_gust_spmv_ragged_local_db,
 )
 from .ref import (
     gust_spmv_local_ref,
@@ -54,7 +61,37 @@ __all__ = [
     "gust_spmm",
     "gust_spmm_auto",
     "packed_spec",
+    "normalize_choice",
 ]
+
+#: Legal values of every string knob the executor (and PlanConfig)
+#: accepts — the one place rejection messages are defined.
+EXECUTE_CHOICES = {
+    "gather": ("resident", "local", "auto"),
+    "backend": ("pallas", "jnp"),
+    "layout": ("padded", "ragged", "auto"),
+    "pipeline": ("single", "double", "auto"),
+}
+
+
+def normalize_choice(name: str, value: str, allowed: Tuple[str, ...] = None):
+    """Validate a string knob against its allowed values, raising the one
+    normalized rejection message every caller shares::
+
+        unknown <name> 'x'; expected one of: 'a', 'b'
+
+    Returns the value unchanged so call sites can validate inline.  The
+    old failure mode for a typo'd ``gather``/``backend``/``layout`` was a
+    late, opaque kernel- or trace-time error; this fails fast at the API
+    edge instead."""
+    if allowed is None:
+        allowed = EXECUTE_CHOICES[name]
+    if value not in allowed:
+        raise ValueError(
+            f"unknown {name} {value!r}; expected one of: "
+            + ", ".join(repr(a) for a in allowed)
+        )
+    return value
 
 
 def _prep_x(x: jnp.ndarray, n: int, l: int) -> jnp.ndarray:
@@ -75,10 +112,16 @@ def _seg_flat(packed) -> jnp.ndarray:
     return jnp.asarray(packed.seg_blk, jnp.int32).reshape(-1)
 
 
+def _scale2d(packed) -> jnp.ndarray:
+    """The per-block scale leaf as the (T_blk, 1) f32 column the
+    quantized kernels take."""
+    return jnp.asarray(packed.scale_blk, jnp.float32).reshape(-1, 1)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("use_kernel", "interpret", "c_blk", "transpose_io",
-                     "gather"),
+                     "gather", "pipeline", "backend", "layout"),
 )
 def execute_spmm(
     packed: Union[PackedSchedule, RaggedSchedule],
@@ -89,15 +132,23 @@ def execute_spmm(
     c_blk: int = 8,
     transpose_io: bool = False,
     gather: str = "auto",
+    pipeline: str = "auto",
+    backend: str = None,
+    layout: str = "auto",
 ) -> jnp.ndarray:
     """``y = M @ x`` from either fixed-shape scheduled layout;
     x (n, B) -> y (m, B).
 
     ``c_blk`` only applies to the padded layout (a ragged stream's block
-    height is baked in at pack time).  ``transpose_io=True`` takes and
-    returns batch-major arrays instead — x (B, n) -> y (B, m) — with both
-    transposes inside this jit (XLA fuses them into the gather/scatter),
-    so batch-major callers never materialize a transposed copy.
+    height is baked in at pack time), and there only to the
+    *unquantized resident* path — the local path runs at the pack-time
+    block height its gather tables were built for, and a quantized
+    stream's scales are per pack-time block; both raise ``ValueError``
+    on a mismatched override instead of silently ignoring it.
+    ``transpose_io=True`` takes and returns batch-major arrays instead —
+    x (B, n) -> y (B, m) — with both transposes inside this jit (XLA
+    fuses them into the gather/scatter), so batch-major callers never
+    materialize a transposed copy.
 
     ``gather`` selects the Buffer-Filler mode: ``"resident"`` (x whole in
     VMEM, one-hot over every column segment), ``"local"`` (stream only
@@ -105,13 +156,35 @@ def execute_spmm(
     table — O(S_blk) gather work per slot instead of O(seg_count), no
     whole-x VMEM residency), or ``"auto"`` (the
     :func:`~repro.core.packing.resolve_gather` locality-ratio decision).
-    Both modes are bit-identical.  The local path runs at the pack-time
-    block height (``packed.c_blk`` — the granularity its tables were
-    built for); a padded-layout ``c_blk`` override only applies to the
-    resident path."""
-    if gather not in ("resident", "local", "auto"):
+    Both modes are bit-identical.
+
+    ``pipeline`` selects the kernel fetch pipeline: ``"single"`` (one
+    tile in flight, the reduction as extra grid dimensions) or
+    ``"double"`` (two-slot ping/pong async copies overlapping the fetch
+    of tile ``i+1`` with the math of tile ``i``, the reduction as an
+    in-kernel loop).  ``"auto"`` means double on the kernel path.  The
+    two are bit-identical; the jnp path ignores the knob.
+
+    ``backend`` optionally overrides ``use_kernel`` with the plan-level
+    spelling: ``"pallas"`` / ``"jnp"`` (``None`` keeps ``use_kernel``).
+    ``layout`` is an assertion, not a choice — the layout is carried by
+    the artifact's type; naming the wrong one raises instead of silently
+    running the other stream.  Unknown ``gather``/``pipeline``/
+    ``backend``/``layout`` strings raise the normalized
+    :func:`normalize_choice` rejection."""
+    normalize_choice("gather", gather)
+    normalize_choice("pipeline", pipeline)
+    normalize_choice("layout", layout)
+    if backend is not None:
+        normalize_choice("backend", backend)
+        use_kernel = backend == "pallas"
+    actual_layout = (
+        "ragged" if isinstance(packed, RaggedSchedule) else "padded"
+    )
+    if layout not in ("auto", actual_layout):
         raise ValueError(
-            f"gather must be 'resident', 'local' or 'auto', got {gather!r}"
+            f"layout={layout!r} requested but the packed artifact is "
+            f"{actual_layout} (the layout is decided at pack time)"
         )
     m, n = packed.shape
     if transpose_io:
@@ -126,49 +199,109 @@ def execute_spmm(
     l, W = packed.l, packed.num_windows
     b = x.shape[1]
     ragged = isinstance(packed, RaggedSchedule)
+    quant = packed.scale_blk is not None
     if gather == "auto":
         gather = resolve_gather(packed.s_blk, packed.seg_count)
+    if not ragged and c_blk != packed.c_blk:
+        if gather == "local":
+            raise ValueError(
+                f"c_blk={c_blk} override on the padded local path is not "
+                f"executable: the pack-time gather tables were built at "
+                f"c_blk={packed.c_blk} (re-pack at the desired block "
+                f"height, or use gather='resident')"
+            )
+        if quant:
+            raise ValueError(
+                f"c_blk={c_blk} override on a quantized stream is not "
+                f"executable: the per-block scales are aligned to the "
+                f"pack-time c_blk={packed.c_blk} blocks (re-pack at the "
+                f"desired block height)"
+            )
 
     if use_kernel and packed.fusable:
+        double = pipeline != "single"
         x2d = _prep_x(x, n, l)
+        vdt, idt = str(packed.m_blk.dtype), str(packed.col_blk.dtype)
+        scale_args = (_scale2d(packed),) if quant else ()
         if ragged:
             if gather == "local":
-                fn = make_gust_spmv_ragged_local(
-                    packed.num_blocks, W, l, packed.s_blk, b,
-                    c_blk=packed.c_blk, interpret=interpret,
-                )
+                if double:
+                    fn = make_gust_spmv_ragged_local_db(
+                        packed.num_blocks, W, l, packed.s_blk, b,
+                        c_blk=packed.c_blk, interpret=interpret,
+                        quantized=quant, x_dtype=str(x2d.dtype),
+                    )
+                else:
+                    fn = make_gust_spmv_ragged_local(
+                        packed.num_blocks, W, l, packed.s_blk, b,
+                        c_blk=packed.c_blk, interpret=interpret,
+                        quantized=quant,
+                    )
                 y_win = fn(
                     packed.block_window, packed.block_starts,
                     _seg_flat(packed),
-                    packed.m_blk, packed.col_loc, packed.row_blk, x2d,
+                    packed.m_blk, packed.col_loc, packed.row_blk,
+                    *scale_args, x2d,
+                )
+            elif double:
+                fn = make_gust_spmv_ragged_db(
+                    packed.num_blocks, W, l, packed.seg_count, b,
+                    c_blk=packed.c_blk, interpret=interpret,
+                    quantized=quant, value_dtype=vdt, index_dtype=idt,
+                )
+                y_win = fn(
+                    packed.block_starts,
+                    packed.m_blk, packed.col_blk, packed.row_blk,
+                    *scale_args, x2d,
                 )
             else:
                 fn = make_gust_spmv_ragged(
                     packed.num_blocks, W, l, packed.seg_count, b,
-                    c_blk=packed.c_blk, interpret=interpret,
+                    c_blk=packed.c_blk, interpret=interpret, quantized=quant,
                 )
                 y_win = fn(
                     packed.block_window, packed.block_starts,
-                    packed.m_blk, packed.col_blk, packed.row_blk, x2d,
+                    packed.m_blk, packed.col_blk, packed.row_blk,
+                    *scale_args, x2d,
                 )
         elif gather == "local":
-            fn = make_gust_spmv_local(
-                W, packed.c_pad, l, packed.s_blk, b, c_blk=packed.c_blk,
-                interpret=interpret,
-            )
+            if double:
+                fn = make_gust_spmv_local_db(
+                    W, packed.c_pad, l, packed.s_blk, b,
+                    c_blk=packed.c_blk, interpret=interpret,
+                    quantized=quant, x_dtype=str(x2d.dtype),
+                )
+            else:
+                fn = make_gust_spmv_local(
+                    W, packed.c_pad, l, packed.s_blk, b,
+                    c_blk=packed.c_blk, interpret=interpret, quantized=quant,
+                )
             y_win = fn(
                 _seg_flat(packed),
-                packed.m_blk, packed.col_loc, packed.row_blk, x2d,
+                packed.m_blk, packed.col_loc, packed.row_blk,
+                *scale_args, x2d,
             )
         else:
-            fn = make_gust_spmv(
-                W, packed.c_pad, l, packed.seg_count, b, c_blk=c_blk,
-                interpret=interpret,
+            eff_c_blk = packed.c_blk if quant else c_blk
+            if double:
+                fn = make_gust_spmv_db(
+                    W, packed.c_pad, l, packed.seg_count, b,
+                    c_blk=eff_c_blk, interpret=interpret,
+                    quantized=quant, value_dtype=vdt, index_dtype=idt,
+                )
+            else:
+                fn = make_gust_spmv(
+                    W, packed.c_pad, l, packed.seg_count, b, c_blk=eff_c_blk,
+                    interpret=interpret, quantized=quant,
+                )
+            y_win = fn(
+                packed.m_blk, packed.col_blk, packed.row_blk,
+                *scale_args, x2d,
             )
-            y_win = fn(packed.m_blk, packed.col_blk, packed.row_blk, x2d)
     else:
         seg_count = -(-n // l)
         xp = jnp.pad(x, ((0, seg_count * l - n), (0, 0)))
+        scale_kw = {"scale_blk": packed.scale_blk} if quant else {}
         if ragged:
             if gather == "local":
                 y_win = gust_spmv_ragged_local_ref(
@@ -181,6 +314,7 @@ def execute_spmm(
                     num_windows=W,
                     l=l,
                     c_blk=packed.c_blk,
+                    **scale_kw,
                 )
             else:
                 y_win = gust_spmv_ragged_ref(
@@ -192,6 +326,7 @@ def execute_spmm(
                     num_windows=W,
                     l=l,
                     c_blk=packed.c_blk,
+                    **scale_kw,
                 )
         elif gather == "local":
             y_win = gust_spmv_local_ref(
@@ -203,6 +338,7 @@ def execute_spmm(
                 num_windows=W,
                 l=l,
                 c_blk=packed.c_blk,
+                **scale_kw,
             )
         else:
             y_win = gust_spmv_ref(
@@ -212,6 +348,8 @@ def execute_spmm(
                 xp,
                 num_windows=W,
                 l=l,
+                c_blk=packed.c_blk,
+                **scale_kw,
             )
     y_sorted = y_win.reshape(W * l, b)
     if packed.identity_perm:

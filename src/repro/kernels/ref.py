@@ -25,7 +25,26 @@ __all__ = [
     "gust_spmv_ragged_local_ref",
     "gather_fill_ref",
     "gather_fill_local_ref",
+    "dequant_ref",
 ]
+
+
+def dequant_ref(
+    m_blocks: jnp.ndarray,  # (T*c_blk, l) int8 quantized values
+    scale_blk: jnp.ndarray,  # (T,) f32 per-block scales
+    *,
+    c_blk: int,
+) -> jnp.ndarray:
+    """The one definition of int8 dequant semantics, shared bit-exactly by
+    kernels and oracles: ``v̂ = float32(q) * scale`` — a single f32
+    multiply by the slot's block scale, nothing else (no rounding, no
+    intermediate cast).  The kernels perform the same multiply on their
+    (c_blk, l) value tile before the accumulate, so kernel and oracle
+    dequantized values are bitwise equal.  Padding slots store q == 0 and
+    dequantize to exactly 0.0, preserving the zero-contribution
+    invariant."""
+    scale = jnp.repeat(scale_blk.astype(jnp.float32), c_blk)  # (T*c_blk,)
+    return m_blocks.astype(jnp.float32) * scale[:, None]
 
 
 def gather_fill_ref(
@@ -96,9 +115,14 @@ def gust_spmv_ref(
     *,
     num_windows: int,
     l: int,
+    scale_blk: jnp.ndarray = None,  # (T_blk,) f32 when the stream is int8
+    c_blk: int = 8,
 ) -> jnp.ndarray:
     """Oracle for the flagship kernel: gather, multiply, scatter-add into
-    per-window accumulators.  Returns (W, l, B) f32."""
+    per-window accumulators.  ``scale_blk`` dequantizes an int8 stream
+    first (:func:`dequant_ref`).  Returns (W, l, B) f32."""
+    if scale_blk is not None:
+        m_blocks = dequant_ref(m_blocks, scale_blk, c_blk=c_blk)
     v_sch = gather_fill_ref(col_blocks, x_padded)  # (T, l, B)
     window = _padded_windows(m_blocks.shape[0], num_windows)
     return _window_accumulate(
@@ -116,9 +140,12 @@ def gust_spmv_local_ref(
     num_windows: int,
     l: int,
     c_blk: int,
+    scale_blk: jnp.ndarray = None,  # (T_blk,) f32 when the stream is int8
 ) -> jnp.ndarray:
     """Segment-local oracle for the padded layout (gather via the
     pack-time table; same accumulate).  Returns (W, l, B) f32."""
+    if scale_blk is not None:
+        m_blocks = dequant_ref(m_blocks, scale_blk, c_blk=c_blk)
     v_sch = gather_fill_local_ref(col_loc, seg_blk, x_padded, l=l, c_blk=c_blk)
     window = _padded_windows(m_blocks.shape[0], num_windows)
     return _window_accumulate(
@@ -136,10 +163,13 @@ def gust_spmv_ragged_ref(
     num_windows: int,
     l: int,
     c_blk: int,
+    scale_blk: jnp.ndarray = None,  # (T_blk,) f32 when the stream is int8
 ) -> jnp.ndarray:
     """Oracle for the ragged scalar-prefetch kernel: same gather/multiply,
     with the window of each stream row read from ``block_window`` instead
     of a fixed ``C_pad`` stride.  Returns (W, l, B) f32."""
+    if scale_blk is not None:
+        m_blocks = dequant_ref(m_blocks, scale_blk, c_blk=c_blk)
     v_sch = gather_fill_ref(col_blocks, x_padded)  # (T, l, B)
     window = jnp.repeat(block_window.astype(jnp.int32), c_blk)  # (T,)
     return _window_accumulate(
@@ -158,8 +188,11 @@ def gust_spmv_ragged_local_ref(
     num_windows: int,
     l: int,
     c_blk: int,
+    scale_blk: jnp.ndarray = None,  # (T_blk,) f32 when the stream is int8
 ) -> jnp.ndarray:
     """Segment-local oracle for the ragged stream.  Returns (W, l, B)."""
+    if scale_blk is not None:
+        m_blocks = dequant_ref(m_blocks, scale_blk, c_blk=c_blk)
     v_sch = gather_fill_local_ref(col_loc, seg_blk, x_padded, l=l, c_blk=c_blk)
     window = jnp.repeat(block_window.astype(jnp.int32), c_blk)
     return _window_accumulate(

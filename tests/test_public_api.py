@@ -19,7 +19,7 @@ from conftest import SRC
 #: ROADMAP.md (§Plan API + deprecation policy).
 EXPECTED_EXPORTS = sorted([
     # plan/execute API
-    "plan", "GustPlan", "PlanConfig", "PlanCost",
+    "plan", "GustPlan", "PlanConfig", "PlanCost", "TuneResult",
     # formats + scheduler
     "COOMatrix", "GustSchedule", "coo_from_dense", "dense_from_coo",
     "schedule",

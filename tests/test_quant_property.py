@@ -1,0 +1,287 @@
+"""int8 per-block-scaled values + double-buffered kernels (PR 6).
+
+Two kernel-speed invariants locked here:
+
+* **Quantization is a packed-format property.**  ``value_dtype=int8``
+  packs store int8 values with one f32 scale per ``c_blk`` cycle block
+  (``scale_blk``); dequant is the single f32 multiply defined by
+  :func:`repro.kernels.ref.dequant_ref` and shared bit-exactly by every
+  kernel and oracle.  Padding slots quantize to exactly 0, all-zero
+  blocks carry scale 1.0, and ``scale_blk`` survives every packed-format
+  transformation — ``repad_to`` / ``repad_to_blocks``, the leaves/meta
+  codec, and serving ``stack`` — bit-identically.
+
+* **Double-buffering is invisible.**  The two-slot ping/pong kernels
+  perform the same f32 additions in the same order as the
+  single-buffered kernels, so ``pipeline="double"`` vs ``"single"``
+  outputs are equal to the last bit on both layouts, both gather modes,
+  and both value dtypes.
+
+The hypothesis property sweeps random/power-law matrices; without
+hypothesis a seeded deterministic slice runs instead (same body).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.formats import coo_from_dense
+from repro.core.packing import (
+    pack_ragged,
+    pack_schedule,
+    packed_from_leaves,
+    packed_leaves,
+    packed_meta,
+    ragged_from_leaves,
+    ragged_leaves,
+    ragged_meta,
+)
+from repro.core.plan import GustPlan, PlanConfig, plan
+from repro.core.scheduler import schedule
+from repro.kernels.ops import execute_spmm
+from repro.kernels.ref import dequant_ref
+
+from test_ragged import power_law_dense, random_dense
+
+
+def _quant_invariants(art):
+    """Pack-time quantization contract on one int8 artifact."""
+    assert art.quantized
+    m = np.asarray(art.m_blk)
+    scale = np.asarray(art.scale_blk)
+    assert m.dtype == np.int8
+    assert scale.dtype == np.float32
+    assert scale.shape == (m.shape[0] // art.c_blk,)
+    assert np.all(scale > 0), "scales must be positive (1.0 for zero blocks)"
+    # all-zero blocks quantize with the identity scale
+    blocks = m.reshape(-1, art.c_blk * art.l)
+    zero_blocks = ~np.any(blocks, axis=1)
+    orig = np.asarray(dequant_ref(art.m_blk, art.scale_blk, c_blk=art.c_blk))
+    zero_orig = ~np.any(
+        orig.reshape(-1, art.c_blk * art.l), axis=1
+    )
+    np.testing.assert_array_equal(zero_blocks, zero_orig)
+    assert np.all(scale[zero_blocks] == 1.0)
+    # |q| <= 127 and the per-block absmax maps to ~127
+    assert np.abs(m).max(initial=0) <= 127
+
+
+def _assert_all_paths_agree(art, x, dense_ref, tol):
+    """single==double bitwise per (gather, backend); kernel ~= oracle."""
+    outs = {}
+    for gather in ("resident", "local"):
+        for pipeline in ("single", "double"):
+            outs[(gather, pipeline)] = np.asarray(execute_spmm(
+                art, x, use_kernel=True, interpret=True,
+                gather=gather, pipeline=pipeline,
+            ))
+        outs[(gather, "jnp")] = np.asarray(execute_spmm(
+            art, x, use_kernel=False, gather=gather,
+        ))
+        assert np.array_equal(
+            outs[(gather, "single")], outs[(gather, "double")]
+        ), f"double-buffered kernel diverged bitwise ({gather})"
+        # kernel and oracle share bit-identical dequant + partial products
+        # but accumulate in different orders -> allclose at f32 epsilon
+        np.testing.assert_allclose(
+            outs[(gather, "single")], outs[(gather, "jnp")],
+            rtol=1e-5, atol=1e-5,
+        )
+    assert np.array_equal(
+        outs[("resident", "single")], outs[("local", "single")]
+    ), "local gather diverged from resident on the quantized stream"
+    np.testing.assert_allclose(
+        outs[("resident", "jnp")], dense_ref, atol=tol, rtol=0
+    )
+    return outs[("resident", "single")]
+
+
+def _property_body(args):
+    m, n, density, l, b, skew, seed = args
+    rng = np.random.default_rng(seed)
+    dense = (
+        power_law_dense(rng, m, n, base_density=density * 0.2)
+        if skew
+        else random_dense(rng, m, n, density)
+    )
+    x = jnp.asarray(rng.standard_normal((n, b)).astype(np.float32))
+    sched = schedule(coo_from_dense(dense), l)
+    # per-slot quant error <= scale/2; <= c_pad slots accumulate per output
+    for art in (
+        pack_schedule(sched, value_dtype=jnp.int8),
+        pack_ragged(sched, value_dtype=jnp.int8),
+    ):
+        _quant_invariants(art)
+        scale = np.asarray(art.scale_blk)
+        slots_per_out = art.m_blk.shape[0] // max(art.num_windows, 1)
+        tol = 0.5 * scale.max() * float(np.abs(np.asarray(x)).max()) \
+            * max(slots_per_out, 1) + 1e-6
+        _assert_all_paths_agree(art, x, dense @ np.asarray(x), tol)
+    # f32 stream: double-buffering must be invisible there too
+    art32 = pack_schedule(sched)
+    assert not art32.quantized and art32.scale_blk is None
+    _assert_all_paths_agree(art32, x, dense @ np.asarray(x), 1e-4)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    matrix_strategy = st.tuples(
+        st.integers(2, 40),  # m
+        st.integers(2, 48),  # n
+        st.sampled_from([0.05, 0.2, 0.5]),
+        st.sampled_from([4, 8]),  # l
+        st.integers(1, 3),  # B
+        st.booleans(),  # power-law skew
+        st.integers(0, 10_000),  # seed
+    )
+
+    @settings(max_examples=15, deadline=None)
+    @given(args=matrix_strategy)
+    def test_quant_roundtrip_property(args):
+        _property_body(args)
+
+else:  # deterministic slice of the sweep without hypothesis
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_quant_roundtrip_property(seed):
+        rng = np.random.default_rng(seed + 17)
+        args = (
+            int(rng.integers(2, 40)), int(rng.integers(2, 48)),
+            [0.05, 0.2, 0.5][seed % 3], [4, 8][seed % 2],
+            1 + seed % 3, bool(seed % 2), seed,
+        )
+        _property_body(args)
+
+
+# ---------------------------------------------------------------------------
+# repad: scales survive, new blocks quantize to exactly zero
+# ---------------------------------------------------------------------------
+
+
+def _mk(seed=5, m=40, n=48, l=8, density=0.25):
+    rng = np.random.default_rng(seed)
+    dense = random_dense(rng, m, n, density)
+    x = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+    return schedule(coo_from_dense(dense), l), x
+
+
+def test_repad_preserves_scales_padded():
+    sched, x = _mk()
+    art = pack_schedule(sched, value_dtype=jnp.int8)
+    grown = art.repad_to(art.c_pad + 2 * art.c_blk)
+    assert grown.quantized
+    w = art.num_windows
+    old = np.asarray(art.scale_blk).reshape(w, -1)
+    new = np.asarray(grown.scale_blk).reshape(w, -1)
+    np.testing.assert_array_equal(old, new[:, : old.shape[1]])
+    assert np.all(new[:, old.shape[1]:] == 1.0), \
+        "padding blocks must carry the identity scale"
+    pad_rows = np.asarray(grown.m_blk).reshape(
+        w, grown.c_pad, grown.l
+    )[:, art.c_pad:]
+    assert np.all(pad_rows == 0), "padding slots must quantize to int8 zero"
+    y_old = np.asarray(execute_spmm(art, x, use_kernel=True))
+    y_new = np.asarray(execute_spmm(grown, x, use_kernel=True))
+    assert np.array_equal(y_old, y_new)
+
+
+def test_repad_preserves_scales_ragged():
+    sched, x = _mk()
+    art = pack_ragged(sched, value_dtype=jnp.int8)
+    grown = art.repad_to_blocks(art.num_blocks + 3)
+    assert grown.quantized
+    old = np.asarray(art.scale_blk)
+    new = np.asarray(grown.scale_blk)
+    np.testing.assert_array_equal(old, new[: old.shape[0]])
+    assert np.all(new[old.shape[0]:] == 1.0)
+    assert np.all(
+        np.asarray(grown.m_blk)[art.num_blocks * art.c_blk:] == 0
+    )
+    y_old = np.asarray(execute_spmm(art, x, use_kernel=True))
+    y_new = np.asarray(execute_spmm(grown, x, use_kernel=True))
+    assert np.array_equal(y_old, y_new)
+
+
+def test_repad_quantized_requires_block_aligned_c_pad():
+    sched, _ = _mk()
+    art = pack_schedule(sched, value_dtype=jnp.int8)
+    with pytest.raises(ValueError, match="c_blk"):
+        art.repad_to(art.c_pad + 1)
+
+
+# ---------------------------------------------------------------------------
+# codec + stack: scale_blk is a first-class leaf
+# ---------------------------------------------------------------------------
+
+
+def test_codec_roundtrips_scale_blk():
+    sched, x = _mk()
+    for pack, leaves_fn, meta_fn, from_fn in (
+        (pack_schedule, packed_leaves, packed_meta, packed_from_leaves),
+        (pack_ragged, ragged_leaves, ragged_meta, ragged_from_leaves),
+    ):
+        art = pack(sched, value_dtype=jnp.int8)
+        art32 = pack(sched)
+        leaves, meta = leaves_fn(art), meta_fn(art)
+        assert "scale_blk" in leaves
+        assert "scale_blk" not in leaves_fn(art32), \
+            "f32 packs must not grow a scale leaf"
+        assert meta == meta_fn(art32), \
+            "quantization must not change the static meta tuple"
+        back = from_fn(leaves, meta)
+        assert back.quantized
+        np.testing.assert_array_equal(
+            np.asarray(back.scale_blk), np.asarray(art.scale_blk)
+        )
+        y0 = np.asarray(execute_spmm(art, x, use_kernel=True))
+        y1 = np.asarray(execute_spmm(back, x, use_kernel=True))
+        assert np.array_equal(y0, y1)
+
+
+def test_stack_carries_scales_and_rejects_mixed():
+    sched_a, x = _mk(seed=6)
+    sched_b, _ = _mk(seed=7)
+    cfg = PlanConfig(l=8, value_dtype="int8", layout="padded")
+    pa, pb = plan(sched_a, cfg, cache=None), plan(sched_b, cfg, cache=None)
+    st = GustPlan.stack([pa, pb])
+    assert "scale_blk" in st["leaves"]
+    assert st["leaves"]["scale_blk"].shape[0] == 2
+    # each layer's slice re-executes identically to its repadded artifact
+    for i, p in enumerate((pa, pb)):
+        layer = GustPlan.from_spec({
+            "leaves": {k: v[i] for k, v in st["leaves"].items()},
+            "meta": st["meta"],
+        })
+        assert layer.config.value_dtype == "int8"
+        y_plan = np.asarray(p.spmm(x))
+        y_layer = np.asarray(layer.spmm(x))
+        assert np.array_equal(y_plan, y_layer)
+    p32 = plan(sched_b, dataclasses.replace(cfg, value_dtype="float32"),
+               cache=None)
+    with pytest.raises(ValueError, match="mixed quantized"):
+        GustPlan.stack([pa, p32])
+
+
+# ---------------------------------------------------------------------------
+# dequant semantics: the oracle multiply IS the kernel multiply
+# ---------------------------------------------------------------------------
+
+
+def test_dequant_ref_is_single_f32_multiply():
+    rng = np.random.default_rng(11)
+    q = rng.integers(-127, 128, (12, 8)).astype(np.int8)
+    scale = rng.uniform(0.01, 2.0, (3,)).astype(np.float32)
+    out = np.asarray(dequant_ref(jnp.asarray(q), jnp.asarray(scale), c_blk=4))
+    expect = q.astype(np.float32) * np.repeat(scale, 4)[:, None]
+    assert np.array_equal(out, expect), \
+        "dequant must be exactly float32(q) * scale, one multiply"

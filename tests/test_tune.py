@@ -1,0 +1,241 @@
+"""Measured autotuner, executor validation, and cost observability (PR 6).
+
+Covers the satellite contracts around the tuner tentpole:
+
+* ``execute_spmm`` rejects unknown ``gather``/``backend``/``layout``/
+  ``pipeline`` strings with one normalized message
+  (``kernels.ops.normalize_choice``), and raises a clear error when an
+  execute-time ``c_blk`` override cannot apply (segment-local tables and
+  per-block scales are built at pack-time ``c_blk``).
+* :func:`repro.core.packing.resolve_tuning` is the single tuning
+  decision point: fastest measured candidate unless the improvement over
+  the baseline is below the margin.
+* :meth:`GustPlan.tune` returns a plan no slower than the static
+  defaults, records a full :class:`TuneResult`, and memoizes the sweep
+  content-keyed in the :class:`ScheduleCache`.
+* :meth:`GustPlan.cost` reports the resolved ``(layout, gather,
+  backend, pipeline)`` choices and the plan's cache hit/miss counters.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.formats import coo_from_dense
+from repro.core.packing import (
+    DEFAULT_TUNE_IMPROVEMENT,
+    ScheduleCache,
+    pack_schedule,
+    resolve_tuning,
+)
+from repro.core.plan import PlanConfig, TuneResult, plan
+from repro.core.scheduler import schedule
+from repro.kernels.ops import EXECUTE_CHOICES, execute_spmm, normalize_choice
+
+from test_ragged import random_dense
+
+
+def _mk(seed=0, m=40, n=48, l=8, density=0.25, b=3):
+    rng = np.random.default_rng(seed)
+    dense = random_dense(rng, m, n, density)
+    x = jnp.asarray(rng.standard_normal((n, b)).astype(np.float32))
+    return dense, schedule(coo_from_dense(dense), l), x
+
+
+# ---------------------------------------------------------------------------
+# executor rejection: one normalized message per knob
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("knob,bad", [
+    ("gather", "vmem"),
+    ("gather", "Resident"),
+    ("backend", "cuda"),
+    ("backend", "xla"),
+    ("layout", "dense"),
+    ("pipeline", "triple"),
+    ("pipeline", "DOUBLE"),
+])
+def test_execute_rejects_unknown_choice(knob, bad):
+    _, sched, x = _mk()
+    art = pack_schedule(sched)
+    with pytest.raises(ValueError) as ei:
+        execute_spmm(art, x, **{knob: bad})
+    msg = str(ei.value)
+    assert msg == normalize_choice_error(knob, bad), msg
+
+
+def normalize_choice_error(knob, bad):
+    allowed = ", ".join(repr(c) for c in EXECUTE_CHOICES[knob])
+    return f"unknown {knob} {bad!r}; expected one of: {allowed}"
+
+
+@pytest.mark.parametrize("knob", sorted(EXECUTE_CHOICES))
+def test_normalize_choice_accepts_known(knob):
+    for value in EXECUTE_CHOICES[knob]:
+        assert normalize_choice(knob, value) == value
+    with pytest.raises(ValueError):
+        normalize_choice(knob, "nope")
+
+
+def test_execute_backend_string_routes():
+    _, sched, x = _mk()
+    art = pack_schedule(sched)
+    y_jnp = np.asarray(execute_spmm(art, x, backend="jnp"))
+    y_pal = np.asarray(execute_spmm(art, x, backend="pallas", interpret=True))
+    np.testing.assert_allclose(y_jnp, y_pal, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# c_blk execute-time override: clear errors where it cannot apply
+# ---------------------------------------------------------------------------
+
+
+def test_c_blk_override_on_local_padded_raises():
+    _, sched, x = _mk()
+    art = pack_schedule(sched, c_blk=8)
+    with pytest.raises(ValueError, match="pack-time gather tables"):
+        execute_spmm(art, x, c_blk=4, gather="local")
+    # resident mode may legitimately re-block the padded stream
+    y8 = np.asarray(execute_spmm(art, x, c_blk=8, gather="resident"))
+    y4 = np.asarray(execute_spmm(art, x, c_blk=4, gather="resident"))
+    np.testing.assert_allclose(y8, y4, rtol=1e-5, atol=1e-5)
+
+
+def test_c_blk_override_on_quantized_raises():
+    _, sched, x = _mk()
+    art = pack_schedule(sched, c_blk=8, value_dtype=jnp.int8)
+    with pytest.raises(ValueError, match="per-block scales"):
+        execute_spmm(art, x, c_blk=4, gather="resident")
+
+
+# ---------------------------------------------------------------------------
+# resolve_tuning: the one decision point
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_tuning_picks_fastest_with_margin():
+    meas = {"a": 1.0, "b": 0.5, "c": 0.8}
+    assert resolve_tuning(meas, "a") == "b"  # 2x beats the default margin
+    # below the margin the baseline stands
+    assert resolve_tuning({"a": 1.0, "b": 0.99}, "a") == "a"
+    assert resolve_tuning(
+        {"a": 1.0, "b": 0.5}, "a", min_improvement=3.0
+    ) == "a"
+    # the baseline itself being fastest is stable
+    assert resolve_tuning({"a": 0.1, "b": 0.5}, "a") == "a"
+    assert DEFAULT_TUNE_IMPROVEMENT > 1.0
+
+
+def test_resolve_tuning_validates_inputs():
+    with pytest.raises(ValueError):
+        resolve_tuning({}, "a")
+    with pytest.raises(ValueError):
+        resolve_tuning({"b": 1.0}, "a")  # baseline not measured
+    with pytest.raises(ValueError):
+        resolve_tuning({"a": 0.0}, "a")  # non-positive time
+
+
+# ---------------------------------------------------------------------------
+# GustPlan.tune
+# ---------------------------------------------------------------------------
+
+
+def test_tune_no_slower_than_static_and_memoized():
+    dense, sched, x = _mk(m=48, n=64, b=4)
+    cache = ScheduleCache()
+    p = plan(sched, PlanConfig(l=8, c_blk=4, backend="jnp"), cache=cache)
+    tuned = p.tune(x, iters=2, warmup=1)
+    r = tuned.tuning
+    assert isinstance(r, TuneResult)
+    assert r.baseline in r.measurements and r.choice in r.measurements
+    # the decision point guarantees the winner never measures slower
+    assert r.measurements[r.choice] <= r.measurements[r.baseline]
+    assert r.improvement >= 1.0
+    # the tuned plan executes correctly and spells its knobs explicitly
+    np.testing.assert_allclose(
+        np.asarray(tuned.spmm(x)), dense @ np.asarray(x),
+        rtol=1e-4, atol=1e-4,
+    )
+    assert tuned.config.layout in ("padded", "ragged")
+    assert tuned.config.gather in ("resident", "local")
+    # second tune of the same content is served from the memo
+    again = p.tune(x, iters=2, warmup=1)
+    assert again.tuning is r
+    # a different probe shape is a different sweep
+    x2 = jnp.concatenate([x, x], axis=1)
+    assert p.tune(x2, iters=1, warmup=1).tuning is not r
+    assert r.to_dict()["choice"].startswith("c_blk=")
+
+
+def test_tune_requires_schedule():
+    _, sched, x = _mk()
+    from repro.core.plan import GustPlan
+
+    spec_plan = GustPlan.from_spec(
+        plan(sched, PlanConfig(l=8), cache=None).to_spec()
+    )
+    with pytest.raises(ValueError, match="schedule"):
+        spec_plan.tune(x)
+
+
+def test_tune_pruning_skips_predicted_losers():
+    _, sched, x = _mk()
+    p = plan(sched, PlanConfig(l=8, c_blk=4, backend="jnp"), cache=None)
+    tuned = p.tune(x, iters=1, warmup=1, prune_ratio=1.0)
+    r = tuned.tuning
+    # ratio 1.0 prunes everything that streams more than the best
+    # prediction; the baseline is always timed
+    assert r.baseline in r.measurements
+    for key in r.pruned:
+        assert key not in r.measurements
+    assert len(r.measurements) + len(r.pruned) == len(r.predicted_bytes)
+
+
+# ---------------------------------------------------------------------------
+# cost observability
+# ---------------------------------------------------------------------------
+
+
+def test_cost_reports_resolved_choices_and_cache_counters():
+    _, sched, x = _mk()
+    cache = ScheduleCache()
+    p = plan(sched, PlanConfig(l=8, backend="pallas", interpret=True),
+             cache=cache)
+    c = p.cost()
+    assert c.backend == "pallas"
+    assert c.pipeline == "double"  # auto resolves to double on kernels
+    assert c.layout in ("padded", "ragged")
+    assert c.gather in ("resident", "local")
+    assert c.cache_misses >= 1  # the pack this cost() materialized
+    assert c.cache_entries >= 1
+    before = c.cache_hits
+    p2 = plan(sched, PlanConfig(l=8, backend="pallas", interpret=True),
+              cache=cache)
+    p2.artifact  # same content -> served from cache
+    assert cache.stats()["hits"] > before
+    d = c.to_dict()
+    for key in ("backend", "pipeline", "cache_hits", "cache_misses"):
+        assert key in d
+    # jnp backend reports itself and the no-pipeline truth
+    c_jnp = plan(sched, PlanConfig(l=8, backend="jnp"), cache=None).cost()
+    assert c_jnp.backend == "jnp"
+    assert c_jnp.pipeline == "single"
+    assert c_jnp.cache_hits == c_jnp.cache_misses == 0
+
+
+def test_plan_config_pipeline_knob():
+    with pytest.raises(ValueError, match="pipeline"):
+        PlanConfig(pipeline="quad")
+    dense, sched, x = _mk()
+    outs = [
+        np.asarray(plan(
+            sched,
+            PlanConfig(l=8, backend="pallas", interpret=True, pipeline=pipe),
+            cache=None,
+        ).spmm(x))
+        for pipe in ("single", "double", "auto")
+    ]
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[1], outs[2])
