@@ -20,10 +20,13 @@ from typing import TYPE_CHECKING
 _EXPORTS = {
     # plan/execute API (the front door)
     "plan": "repro.core.plan",
+    "reschedule": "repro.core.plan",
     "GustPlan": "repro.core.plan",
     "PlanConfig": "repro.core.plan",
     "PlanCost": "repro.core.plan",
     "TuneResult": "repro.core.plan",
+    # persistent plan artifacts (cross-process amortization)
+    "PlanStore": "repro.core.plan_store",
     # formats + scheduler
     "COOMatrix": "repro.core.formats",
     "GustSchedule": "repro.core.formats",
@@ -102,7 +105,9 @@ if TYPE_CHECKING:  # static analyzers see the real symbols
         PlanCost,
         TuneResult,
         plan,
+        reschedule,
     )
+    from repro.core.plan_store import PlanStore  # noqa: F401
     from repro.core.scheduler import schedule  # noqa: F401
     from repro.core.spmv import (  # noqa: F401
         distributed_spmv,

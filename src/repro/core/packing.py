@@ -103,14 +103,24 @@ contract as a type.  The steps themselves:
    that :func:`repro.core.plan.plan` schedules and packs through) keys
    results on matrix *content*, so serving/benchmark paths that
    re-derive the same pruned matrix pay for scheduling exactly once.
+   The cache is a bounded LRU (``maxsize``, evictions counted); for
+   amortization *across processes* the same content keys feed
+   :class:`repro.core.plan_store.PlanStore` — ``plan(..., store=...)``
+   reads a previously packed artifact straight off disk (write-behind
+   happens when a fresh plan first materializes its pack), so a server
+   fleet warm-starts without rescheduling or repacking at all.  For
+   drifting sparsity within a process, :func:`splice_ragged_blocks`
+   re-packs only the windows an incremental reschedule dirtied and
+   copies every clean window's blocks bitwise from the old stream.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 from collections import OrderedDict
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -141,7 +151,9 @@ __all__ = [
     "ragged_meta",
     "ragged_from_leaves",
     "stacked_leaf_specs",
+    "splice_ragged_blocks",
     "ScheduleCache",
+    "DEFAULT_SCHEDULE_CACHE_SIZE",
     "schedule_packed",
     "default_cache",
     "clear_cache",
@@ -765,6 +777,142 @@ def pack_ragged(
     )
 
 
+def splice_ragged_blocks(
+    old: RaggedSchedule,
+    sched: GustSchedule,
+    dirty: Sequence[int],
+    *,
+    value_dtype=jnp.float32,
+    index_dtype=jnp.int32,
+) -> RaggedSchedule:
+    """Incremental ragged repack: windows listed in ``dirty`` are packed
+    fresh (via a compact dirty-only sub-schedule), every other window's
+    stream blocks — and per-block int8 scales — are copied bitwise from
+    ``old``.  The result is **bit-identical** to
+    ``pack_ragged(sched, old.c_blk, ...)`` because stream blocks are
+    window-local, quantization scales are block-local, and the gather
+    tables are a pure function of the spliced column stream
+    (:func:`_local_gather_tables` recomputed globally).
+
+    ``old`` must be an un-repadded pack of a schedule that agrees with
+    ``sched`` on every clean window (the :func:`~repro.core.scheduler.
+    incremental_schedule` contract) and on geometry/dtypes — violations
+    raise rather than silently corrupting the stream."""
+    l, W, cb = sched.l, sched.num_windows, old.c_blk
+    if old.l != l or old.num_windows != W or tuple(old.shape) != tuple(sched.shape):
+        raise ValueError("splice: schedule/artifact geometry mismatch")
+    quant = _is_int8(value_dtype)
+    if quant != old.quantized:
+        raise ValueError("splice: quantization mismatch with the old artifact")
+    if jnp.dtype(index_dtype) != jnp.dtype(old.col_blk.dtype):
+        raise ValueError("splice: index dtype mismatch with the old artifact")
+    if not quant and jnp.dtype(value_dtype) != jnp.dtype(old.m_blk.dtype):
+        raise ValueError("splice: value dtype mismatch with the old artifact")
+
+    from .scheduler import _ranges
+
+    dirty = np.asarray(dirty, dtype=np.int64)
+    dirty_mask = np.zeros(W, dtype=bool)
+    dirty_mask[dirty] = True
+    clean = np.nonzero(~dirty_mask)[0]
+
+    bpw_new, bs_new, t_new = _ragged_block_layout(sched, cb)
+    bs_old = np.asarray(old.block_starts, np.int64)
+    bpw_old = np.diff(bs_old)
+    if clean.size and not np.array_equal(bpw_old[clean], bpw_new[clean]):
+        raise ValueError("splice: clean windows changed block counts")
+
+    m_old = np.asarray(old.m_blk)
+    c_old = np.asarray(old.col_blk)
+    r_old = np.asarray(old.row_blk)
+    m_new = np.zeros((t_new * cb, l), dtype=m_old.dtype)
+    c_new = np.empty((t_new * cb, l), dtype=c_old.dtype)
+    c_new[:] = np.arange(l, dtype=c_old.dtype)  # padding invariant: col==lane
+    r_new = np.zeros((t_new * cb, l), dtype=r_old.dtype)
+    scale_new = np.ones((t_new,), np.float32) if quant else None
+
+    if clean.size:
+        src = _ranges(bs_old[clean] * cb, bpw_old[clean] * cb)
+        dst = _ranges(bs_new[clean] * cb, bpw_new[clean] * cb)
+        m_new[dst] = m_old[src]
+        c_new[dst] = c_old[src]
+        r_new[dst] = r_old[src]
+        if quant:
+            sb = _ranges(bs_old[clean], bpw_old[clean])
+            db = _ranges(bs_new[clean], bpw_new[clean])
+            scale_new[db] = np.asarray(old.scale_blk, np.float32)[sb]
+
+    if dirty.size:
+        # Pack only the dirty windows: lift their schedule rows into a
+        # compact sub-schedule (sub window i == dirty[i]) and pack_ragged
+        # it — per-window block content depends only on that window's
+        # rows, so the sub-pack's blocks equal the fresh global pack's.
+        ws = np.asarray(sched.window_starts)
+        cpw = np.diff(ws)
+        sub_cpw = cpw[dirty]
+        sub_ws = np.zeros(dirty.size + 1, dtype=np.int64)
+        np.cumsum(sub_cpw, out=sub_ws[1:])
+        rows_src = _ranges(ws[dirty], sub_cpw)
+        sub_c = int(sub_ws[-1])
+        rows = max(sub_c, 1)
+        sub_m = np.zeros((rows, l), dtype=np.asarray(sched.m_sch).dtype)
+        sub_r = np.zeros((rows, l), dtype=np.int32)
+        sub_col = np.tile(np.arange(l, dtype=np.int32), (rows, 1))
+        sub_valid = np.zeros((rows, l), dtype=bool)
+        if sub_c:
+            sub_m[:sub_c] = np.asarray(sched.m_sch)[rows_src]
+            sub_r[:sub_c] = np.asarray(sched.row_sch)[rows_src]
+            sub_col[:sub_c] = np.asarray(sched.col_sch)[rows_src]
+            sub_valid[:sub_c] = np.asarray(sched.valid)[rows_src]
+        sub_sched = GustSchedule(
+            l=l,
+            shape=(int(dirty.size) * l, sched.shape[1]),
+            nnz=int(sub_valid.sum()),
+            m_sch=sub_m,
+            row_sch=sub_r,
+            col_sch=sub_col,
+            window_starts=sub_ws,
+            row_perm=np.arange(int(dirty.size) * l, dtype=np.int64),
+            valid=sub_valid,
+        )
+        sub = pack_ragged(
+            sub_sched, cb, value_dtype=value_dtype, index_dtype=index_dtype
+        )
+        # sub windows appear in dirty order, so the sub stream maps onto
+        # the dirty destinations row-for-row
+        dst = _ranges(bs_new[dirty] * cb, bpw_new[dirty] * cb)
+        m_new[dst] = np.asarray(sub.m_blk)
+        c_new[dst] = np.asarray(sub.col_blk)
+        r_new[dst] = np.asarray(sub.row_blk)
+        if quant:
+            db = _ranges(bs_new[dirty], bpw_new[dirty])
+            scale_new[db] = np.asarray(sub.scale_blk, np.float32)
+
+    seg_blk, col_loc, s_blk = _local_gather_tables(c_new, l, cb)
+    row_perm = _extended_row_perm(sched)
+    return RaggedSchedule(
+        m_blk=jnp.asarray(m_new, jnp.int8 if quant else value_dtype),
+        col_blk=jnp.asarray(c_new, index_dtype),
+        row_blk=jnp.asarray(r_new, index_dtype),
+        row_perm=jnp.asarray(row_perm),
+        seg_blk=jnp.asarray(seg_blk),
+        col_loc=jnp.asarray(col_loc, index_dtype),
+        block_window=jnp.asarray(np.repeat(np.arange(W, dtype=np.int32), bpw_new)),
+        block_starts=jnp.asarray(bs_new, jnp.int32),
+        l=l,
+        num_windows=W,
+        c_blk=cb,
+        num_blocks=t_new,
+        shape=sched.shape,
+        fusable=_fusable(sched),
+        s_blk=s_blk,
+        identity_perm=bool(
+            np.array_equal(row_perm, np.arange(W * l, dtype=np.int32))
+        ),
+        scale_blk=jnp.asarray(scale_new) if quant else None,
+    )
+
+
 #: Padded-stream waste (``W * C_pad`` over ``T_blk * c_blk``) above which
 #: the ragged layout is chosen — consumed only through
 #: :func:`resolve_layout`, the one waste-threshold decision point.
@@ -1091,20 +1239,33 @@ class ScheduleCache:
     ``maxsize`` must cover a whole model conversion for the reuse to
     materialize: gustify inserts ``reps * len(mats)`` schedule entries
     plus as many packed entries (2 * 32 * 3 = 192 for a 32-layer stack),
-    so the default is sized above that.  Entries hold device arrays —
-    tens of MB each at LLM scale — for the process lifetime; call
-    :func:`clear_cache` after a one-shot conversion to release them."""
+    so the default (:data:`DEFAULT_SCHEDULE_CACHE_SIZE`, overridable via
+    ``REPRO_SCHEDULE_CACHE_SIZE``) is sized above that.  The bound is a
+    hard LRU: long-lived servers planning an unbounded matrix stream top
+    out at ``maxsize`` live entries, with drops counted in ``evictions``
+    (surfaced by :meth:`stats` next to hits/misses).  Entries hold device
+    arrays — tens of MB each at LLM scale — for the process lifetime;
+    call :func:`clear_cache` after a one-shot conversion to release
+    them."""
 
-    def __init__(self, maxsize: int = 256):
+    def __init__(self, maxsize: Optional[int] = None):
+        if maxsize is None:
+            env = os.environ.get("REPRO_SCHEDULE_CACHE_SIZE", "").strip()
+            maxsize = int(env) if env else DEFAULT_SCHEDULE_CACHE_SIZE
+        if maxsize < 1:
+            raise ValueError(f"ScheduleCache maxsize must be >= 1, got {maxsize}")
         self.maxsize = maxsize
         self._store: "OrderedDict[Tuple, object]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     @staticmethod
     def matrix_key(coo: COOMatrix) -> str:
         h = hashlib.sha1()
-        h.update(repr(coo.shape).encode())
+        # canonicalize: a shape rebuilt from numpy scalars (e.g. an npz
+        # round trip) must hash like the original python-int tuple
+        h.update(repr(tuple(int(s) for s in coo.shape)).encode())
         for a in (coo.rows, coo.cols, coo.vals):
             arr = np.ascontiguousarray(a)
             h.update(str(arr.dtype).encode())
@@ -1121,24 +1282,31 @@ class ScheduleCache:
         self._store[key] = val
         while len(self._store) > self.maxsize:
             self._store.popitem(last=False)
+            self.evictions += 1
         return val
 
     def _schedule_for_key(self, mk: str, coo: COOMatrix, l: int,
-                          load_balance: bool, method: str) -> GustSchedule:
+                          load_balance: bool, method: str,
+                          workers: Optional[int] = None) -> GustSchedule:
         from .scheduler import schedule as _schedule
 
+        # ``workers`` is deliberately NOT part of the key: the schedule is
+        # bit-identical for every worker count (chunking invariant).
         key = ("sched", mk, l, load_balance, method)
         return self._get(
             key,
-            lambda: _schedule(coo, l, load_balance=load_balance, method=method),
+            lambda: _schedule(
+                coo, l, load_balance=load_balance, method=method,
+                workers=workers,
+            ),
         )
 
     def schedule(
         self, coo: COOMatrix, l: int, *, load_balance: bool = True,
-        method: str = "fast",
+        method: str = "fast", workers: Optional[int] = None,
     ) -> GustSchedule:
         return self._schedule_for_key(
-            self.matrix_key(coo), coo, l, load_balance, method
+            self.matrix_key(coo), coo, l, load_balance, method, workers
         )
 
     def packed(
@@ -1255,18 +1423,25 @@ class ScheduleCache:
         return self._get(key, build)
 
     def stats(self) -> Dict[str, int]:
-        """Hit/miss/entry counters — surfaced on ``GustPlan.cost()`` so
-        benchmarks and serving logs can report schedule-reuse rates."""
+        """Hit/miss/eviction/entry counters — surfaced on
+        ``GustPlan.cost()`` so benchmarks and serving logs can report
+        schedule-reuse rates and capacity pressure."""
         return {
             "hits": self.hits,
             "misses": self.misses,
+            "evictions": self.evictions,
             "entries": len(self._store),
         }
 
     def clear(self):
         self._store.clear()
-        self.hits = self.misses = 0
+        self.hits = self.misses = self.evictions = 0
 
+
+#: Default LRU capacity of :class:`ScheduleCache` — generous enough for a
+#: whole multi-layer model conversion; override per-process with the
+#: ``REPRO_SCHEDULE_CACHE_SIZE`` env var or per-cache with ``maxsize=``.
+DEFAULT_SCHEDULE_CACHE_SIZE = 256
 
 default_cache = ScheduleCache()
 

@@ -66,9 +66,18 @@ from .packing import (
     ragged_spec,
     ragged_waste_ratio,
     resolve_layout,
+    splice_ragged_blocks,
 )
 
-__all__ = ["PlanConfig", "PlanCost", "TuneResult", "GustPlan", "plan"]
+__all__ = [
+    "PlanConfig",
+    "PlanCost",
+    "TuneResult",
+    "GustPlan",
+    "plan",
+    "reschedule",
+    "RescheduleResult",
+]
 
 _LAYOUTS = ("padded", "ragged", "auto")
 _BACKENDS = ("jnp", "pallas", "auto")
@@ -214,9 +223,14 @@ class PlanCost:
 
     * ``backend`` / ``pipeline`` — the resolved (never ``auto``) execution
       choices next to the resolved ``layout``/``gather``;
-    * ``cache_hits`` / ``cache_misses`` / ``cache_entries`` — the plan's
+    * ``cache_hits`` / ``cache_misses`` / ``cache_entries`` /
+      ``cache_evictions`` — the plan's
       :class:`~repro.core.packing.ScheduleCache` counters at cost time
-      (all zero for cache-less plans).
+      (all zero for cache-less plans); evictions count LRU capacity drops
+      (PR 7).
+    * ``store_hits`` / ``store_misses`` — the plan's attached
+      :class:`~repro.core.plan_store.PlanStore` counters (zero when the
+      plan was built without ``store=``).
     """
 
     cycles: int
@@ -241,6 +255,9 @@ class PlanCost:
     cache_hits: int = 0
     cache_misses: int = 0
     cache_entries: int = 0
+    cache_evictions: int = 0
+    store_hits: int = 0
+    store_misses: int = 0
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -285,12 +302,35 @@ class TuneResult:
             "pruned": [key(k) for k in self.pruned],
         }
 
+    @classmethod
+    def from_dict(cls, d: Dict) -> "TuneResult":
+        """Inverse of :meth:`to_dict` — how a PlanStore warm start revives
+        the recorded sweep on the loaded plan."""
+
+        def parse(s: str) -> Tuple[int, int, str, str]:
+            kv = dict(part.split("=", 1) for part in s.split(","))
+            return (int(kv["c_blk"]), int(kv["l"]), kv["layout"], kv["gather"])
+
+        return cls(
+            choice=parse(d["choice"]),
+            baseline=parse(d["baseline"]),
+            measurements={parse(k): v for k, v in d["measurements"].items()},
+            predicted_bytes={
+                parse(k): v for k, v in d["predicted_bytes"].items()
+            },
+            improvement=d["improvement"],
+            cost_consistent=d["cost_consistent"],
+            pruned=tuple(parse(k) for k in d.get("pruned", [])),
+        )
+
 
 def plan(
     matrix: Union[np.ndarray, COOMatrix, GustSchedule],
     config: Optional[PlanConfig] = None,
     *,
     cache: Optional[ScheduleCache] = default_cache,
+    store=None,
+    workers: Optional[int] = None,
     **overrides,
 ) -> "GustPlan":
     """Schedule ``matrix`` once and return an executable :class:`GustPlan`.
@@ -301,6 +341,15 @@ def plan(
     ``cache=None`` to bypass), so two plans over the same matrix schedule
     exactly once.  Keyword ``overrides`` are applied on top of ``config``:
     ``plan(m, l=64, layout="ragged")``.
+
+    ``store`` (a :class:`~repro.core.plan_store.PlanStore`) extends the
+    amortization across processes: on a hit the packed artifact is loaded
+    straight off disk — zero coloring or packing work — and on a miss the
+    fresh plan persists its artifact (plus any ``TuneResult``) the first
+    time the pack materializes.  Store-loaded plans execute bit-
+    identically but carry no schedule (``cost()``/``tune()``/``shard()``
+    need a fresh plan).  ``workers`` forwards to the window-chunked
+    parallel colorer (None = auto); it never affects plan content.
     """
     if config is None:
         config = PlanConfig()
@@ -326,19 +375,42 @@ def plan(
             f"GustSchedule; got {type(matrix).__name__}"
         )
     _source = matrix  # kept on the plan so tune() can sweep l
+
+    store_key = None
+    if store is not None:
+        store_key = store.key(ScheduleCache.matrix_key(matrix), config)
+        record = store.get(store_key)
+        if record is not None:
+            spec = record["spec"]
+            spec = dict(spec, leaves={
+                k: jnp.asarray(v) for k, v in spec["leaves"].items()
+            })
+            p = GustPlan.from_spec(spec, config=config, cache=cache)
+            p._source = matrix
+            p._store = store
+            p._store_key = store_key
+            p._store_loaded = True
+            if record.get("tuning"):
+                p.tuning = TuneResult.from_dict(record["tuning"])
+            p.summary = record.get("summary")
+            return p
+
     if cache is None:
         from .scheduler import schedule as _schedule
 
         sched = _schedule(
             matrix, config.l, load_balance=config.load_balance,
-            method=config.colorer,
+            method=config.colorer, workers=workers,
         )
     else:
         sched = cache.schedule(
             matrix, config.l, load_balance=config.load_balance,
-            method=config.colorer,
+            method=config.colorer, workers=workers,
         )
-    return GustPlan(config, sched=sched, cache=cache, source=_source)
+    p = GustPlan(config, sched=sched, cache=cache, source=_source)
+    p._store = store
+    p._store_key = store_key
+    return p
 
 
 class GustPlan:
@@ -376,6 +448,17 @@ class GustPlan:
         self._artifact = artifact
         self._source = source  # COO kept (when known) so tune() can sweep l
         self.tuning: Optional[TuneResult] = None
+        # PlanStore attachment (plan(..., store=...)): write-behind fires
+        # when a fresh plan first materializes its pack; loaded plans
+        # carry the stored schedule summary instead of a schedule.
+        self._store = None
+        self._store_key: Optional[str] = None
+        self._store_loaded = False
+        self.summary: Optional[Dict] = None
+        # Incremental rescheduling (reschedule()): per-window content
+        # fingerprints of the source, and the last delta's stats.
+        self._window_hashes: Optional[np.ndarray] = None
+        self.resched: Optional["RescheduleResult"] = None
 
     # -- identity ----------------------------------------------------------
 
@@ -403,10 +486,37 @@ class GustPlan:
 
     @property
     def artifact(self) -> Union[PackedSchedule, RaggedSchedule]:
-        """The packed execution layout; materialized lazily on first use."""
+        """The packed execution layout; materialized lazily on first use.
+        A fresh plan with an attached store persists the artifact here
+        (write-behind) — schedule-only consumers that never pack never
+        write either."""
         if self._artifact is None:
             self._artifact = self._pack()
+            self._store_put()
         return self._artifact
+
+    def _store_put(self) -> None:
+        """Best-effort write-behind of the packed artifact (plus tuning
+        and a schedule summary for loaded-plan observability).  Never
+        raises: persistence must not break execution."""
+        if self._store is None or self._store_key is None or self._store_loaded:
+            return
+        try:
+            summary = None
+            if self.sched is not None:
+                summary = {
+                    "cycles": int(self.sched.cycles),
+                    "nnz": int(self.sched.nnz),
+                    "utilization": float(self.sched.hardware_utilization),
+                }
+            self._store.put(
+                self._store_key,
+                self.to_spec(),
+                tuning=self.tuning.to_dict() if self.tuning else None,
+                summary=summary,
+            )
+        except Exception:
+            pass
 
     @property
     def gather_mode(self) -> str:
@@ -846,6 +956,13 @@ class GustPlan:
             result = sweep()
         tuned = build(result.choice)
         tuned.tuning = result
+        if self._store is not None and self._source is not None:
+            # persist the tuned winner under the *tuned* config's key, so
+            # a warm start revives both the artifact and the TuneResult
+            tuned._store = self._store
+            tuned._store_key = self._store.key(
+                ScheduleCache.matrix_key(self._source), tuned.config
+            )
         return tuned
 
     # -- cost ----------------------------------------------------------------
@@ -891,6 +1008,8 @@ class GustPlan:
             x_vmem_bytes_local=a.s_blk * self.l * 4,
             backend="pallas" if self._use_kernel() else "jnp",
             pipeline=self._pipeline(),
+            store_hits=self._store.hits if self._store is not None else 0,
+            store_misses=self._store.misses if self._store is not None else 0,
             **{
                 f"cache_{k}": v
                 for k, v in (
@@ -1001,3 +1120,134 @@ def _shard_layout(ragged: RaggedSchedule, n_dev: int):
         jnp.asarray(m_d), jnp.asarray(r_d), jnp.asarray(c_d),
         jnp.asarray(lw_d), w_max, jnp.asarray(idx),
     )
+
+
+# ---------------------------------------------------------------------------
+# Incremental re-planning for drifting sparsity (prune masks, dynamic
+# patterns): diff per-window content, recolor only dirty windows, splice
+# their packed blocks into the existing stream.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RescheduleResult:
+    """What one :func:`reschedule` delta did.
+
+    ``full_fallback`` means the plan was rebuilt from scratch (load-
+    balanced config, or no prior fingerprints/source to diff against);
+    ``spliced`` means the packed ragged stream was updated in place via
+    :func:`~repro.core.packing.splice_ragged_blocks` instead of a full
+    repack."""
+
+    windows: int
+    dirty_windows: int
+    reused_windows: int
+    recolored_edges: int
+    full_fallback: bool
+    spliced: bool
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def reschedule(
+    base: GustPlan,
+    matrix: Union[np.ndarray, COOMatrix],
+    *,
+    workers: Optional[int] = None,
+    store=None,
+) -> GustPlan:
+    """Re-plan ``matrix`` incrementally against ``base`` (a plan over the
+    previous version of the same matrix).
+
+    Per-window content fingerprints are diffed; only dirty windows are
+    recolored (through the same chunked colorer), and — when ``base`` has
+    a materialized ragged artifact — only their packed blocks are
+    rebuilt, with every clean window's blocks copied bitwise.  The result
+    is **bit-identical** to ``plan(matrix, base.config)`` built fresh.
+
+    Incremental reuse requires ``load_balance=False`` (row balancing is a
+    global function of the matrix content, so any delta may reassign
+    every window); load-balanced configs transparently fall back to a
+    full fresh plan, reported via ``.resched.full_fallback``.  Shape
+    changes are an error — build a fresh plan.
+
+    The returned plan carries updated fingerprints, so chaining
+    ``reschedule(p1, m2)`` → ``reschedule(p2, m3)`` never re-hashes the
+    old side.  ``.resched`` holds the delta stats
+    (:class:`RescheduleResult`); dirty/reused window totals also
+    accumulate in :data:`repro.core.scheduler.sched_counters`."""
+    from .scheduler import incremental_schedule, sched_counters
+
+    if not isinstance(base, GustPlan):
+        raise TypeError(f"reschedule() needs a GustPlan, got {type(base).__name__}")
+    if base.sched is None:
+        raise ValueError(
+            "reschedule() needs the base plan's schedule; store-loaded/"
+            "spec plans carry only the packed artifact — build fresh"
+        )
+    if isinstance(matrix, (np.ndarray, jax.Array)):
+        dense = np.asarray(matrix)
+        if dense.ndim != 2:
+            raise ValueError(f"dense matrix must be 2-D, got shape {dense.shape}")
+        matrix = coo_from_dense(dense)
+    if not isinstance(matrix, COOMatrix):
+        raise TypeError(
+            f"reschedule() takes a dense array or COOMatrix, got "
+            f"{type(matrix).__name__}"
+        )
+    if tuple(matrix.shape) != tuple(base.shape):
+        raise ValueError(
+            f"reschedule() cannot change the matrix shape "
+            f"({tuple(base.shape)} -> {tuple(matrix.shape)}); build a fresh plan"
+        )
+
+    cfg = base.config
+    W = base.sched.num_windows
+    can_diff = base._window_hashes is not None or base._source is not None
+    if cfg.load_balance or not can_diff:
+        p = plan(matrix, cfg, cache=base.cache, store=store, workers=workers)
+        p.resched = RescheduleResult(
+            windows=W, dirty_windows=W, reused_windows=0,
+            recolored_edges=p.sched.nnz if p.sched is not None else 0,
+            full_fallback=True, spliced=False,
+        )
+        return p
+
+    edges_before = sched_counters["colored_edges"]
+    new_sched, dirty, new_hashes = incremental_schedule(
+        base.sched,
+        matrix,
+        old_coo=base._source,
+        old_hashes=base._window_hashes,
+        method=cfg.colorer,
+        workers=workers,
+    )
+    recolored_edges = sched_counters["colored_edges"] - edges_before
+
+    p = GustPlan(cfg, sched=new_sched, cache=base.cache, source=matrix)
+    p._window_hashes = new_hashes
+    spliced = False
+    if (
+        isinstance(base._artifact, RaggedSchedule)
+        and p.layout == "ragged"
+    ):
+        p._artifact = splice_ragged_blocks(
+            base._artifact, new_sched, dirty,
+            value_dtype=cfg.value_jnp, index_dtype=cfg.index_jnp,
+        )
+        spliced = True
+    if store is not None:
+        p._store = store
+        p._store_key = store.key(ScheduleCache.matrix_key(matrix), cfg)
+        if spliced:
+            p._store_put()  # artifact already materialized: write now
+    p.resched = RescheduleResult(
+        windows=W,
+        dirty_windows=int(dirty.size),
+        reused_windows=W - int(dirty.size),
+        recolored_edges=int(recolored_edges),
+        full_fallback=False,
+        spliced=spliced,
+    )
+    return p

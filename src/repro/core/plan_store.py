@@ -1,0 +1,251 @@
+"""PlanStore — persistent, content-keyed GUST plan artifacts.
+
+The paper's amortization story (§5.3) says the schedule is paid once per
+matrix; :class:`~repro.core.packing.ScheduleCache` enforces that within a
+process, but every *new* server process still re-paid the edge coloring
+at weight-load time.  The store extends the amortization across process
+boundaries: ``plan(matrix, cfg, store=PlanStore(dir))`` reads a
+previously packed artifact straight off disk (zero coloring work — the
+``sched_counters`` gate in ``benchmarks/sched_bench.py``) and writes one
+back the first time a fresh plan materializes its pack.
+
+Keying and versioning rules (ROADMAP §Scheduler + plan-store invariants):
+
+* The key is ``sha1(matrix content hash | artifact-relevant config)``.
+  Artifact-relevant means exactly the knobs that change the packed
+  leaves/meta: ``l``, ``colorer``, ``load_balance``, ``c_blk``,
+  ``layout``, ``waste_threshold``, ``value_dtype``, ``index_dtype``
+  (:data:`ARTIFACT_KNOBS`).  Execution-time knobs (``backend``,
+  ``gather``, ``pipeline``, ``interpret``, ``mesh_axis``) and the
+  scheduler's ``workers`` count are **excluded** — the same artifact
+  executes under any of them, bit-identically.
+* Every file carries :data:`FORMAT_VERSION`; a version mismatch is a
+  clean miss (counted in ``stale``), never an error — old files are
+  simply re-written by the next warm-up.
+* Writes are atomic (``os.replace`` of a same-directory temp file), so a
+  crashed writer can leave a stray temp file but never a torn artifact.
+* Loads are corruption-tolerant: *any* failure to parse (truncated file,
+  bad magic, undecodable header, short array bytes) counts in
+  ``corrupt`` and reads as a miss.
+
+File format (one plan per file, ``<key>.gustplan``)::
+
+    magic "GUSTPLAN" | header_len uint64-LE | header JSON | raw leaf bytes
+
+The header holds ``{format_version, meta, config, tuning, summary,
+arrays: [{name, dtype, shape, offset, nbytes}]}``; leaf bytes follow
+concatenated in ``arrays`` order.  A bespoke container instead of
+``np.savez`` because the value leaves may be ``bfloat16`` (ml_dtypes),
+which numpy's own format can't round-trip; ``np.frombuffer`` with the
+jax-resolved dtype can.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PlanStore", "ARTIFACT_KNOBS", "FORMAT_VERSION"]
+
+FORMAT_VERSION = 1
+
+_MAGIC = b"GUSTPLAN"
+
+#: The PlanConfig fields that determine the packed artifact's content.
+ARTIFACT_KNOBS = (
+    "l",
+    "colorer",
+    "load_balance",
+    "c_blk",
+    "layout",
+    "waste_threshold",
+    "value_dtype",
+    "index_dtype",
+)
+
+
+def _tuplify(x):
+    """JSON round-trips tuples (and the nested ``shape``) as lists; meta
+    tuples must come back as tuples to compare/splice cleanly."""
+    if isinstance(x, list):
+        return tuple(_tuplify(v) for v in x)
+    return x
+
+
+class PlanStore:
+    """Directory-backed store of packed plan artifacts.
+
+    Thread-compatible and multi-process safe for its intended use
+    (read-mostly fleets): concurrent writers of the same key race
+    benignly — both write identical bytes and the atomic rename keeps
+    whichever lands last.
+
+    Counters: ``hits`` / ``misses`` (surfaced on ``GustPlan.cost()`` as
+    ``store_hits`` / ``store_misses``), ``writes``, ``corrupt``
+    (unparseable files), ``stale`` (format-version mismatches; a subset
+    of misses).
+    """
+
+    def __init__(self, path: str):
+        self.path = os.fspath(path)
+        os.makedirs(self.path, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+        self.writes = 0
+        self.corrupt = 0
+        self.stale = 0
+
+    # -- keying --------------------------------------------------------------
+
+    @staticmethod
+    def config_token(config) -> str:
+        """Canonical JSON of the artifact-relevant config subset."""
+        knobs = {k: getattr(config, k) for k in ARTIFACT_KNOBS}
+        return json.dumps(knobs, sort_keys=True, separators=(",", ":"))
+
+    @classmethod
+    def key(cls, matrix_key: str, config) -> str:
+        h = hashlib.sha1()
+        h.update(f"gust-plan|v{FORMAT_VERSION}|".encode())
+        h.update(matrix_key.encode())
+        h.update(b"|")
+        h.update(cls.config_token(config).encode())
+        return h.hexdigest()
+
+    def _file(self, key: str) -> str:
+        return os.path.join(self.path, f"{key}.gustplan")
+
+    # -- write ---------------------------------------------------------------
+
+    def put(
+        self,
+        key: str,
+        spec: Dict,
+        *,
+        tuning: Optional[Dict] = None,
+        summary: Optional[Dict] = None,
+    ) -> str:
+        """Persist a ``GustPlan.to_spec()`` dict (plus optional JSON-able
+        ``tuning`` / ``summary`` sidecars) under ``key``.  Atomic: readers
+        only ever see complete files."""
+        arrays = []
+        chunks = []
+        offset = 0
+        for name in sorted(spec["leaves"]):
+            arr = np.ascontiguousarray(np.asarray(spec["leaves"][name]))
+            raw = arr.tobytes()
+            arrays.append(
+                {
+                    "name": name,
+                    "dtype": jnp.dtype(arr.dtype).name,
+                    "shape": list(arr.shape),
+                    "offset": offset,
+                    "nbytes": len(raw),
+                }
+            )
+            chunks.append(raw)
+            offset += len(raw)
+        header = json.dumps(
+            {
+                "format_version": FORMAT_VERSION,
+                "meta": list(spec["meta"]),
+                "config": spec.get("config"),
+                "tuning": tuning,
+                "summary": summary,
+                "arrays": arrays,
+            },
+            sort_keys=True,
+        ).encode()
+
+        path = self._file(key)
+        tmp = f"{path}.tmp.{os.getpid()}.{os.urandom(4).hex()}"
+        try:
+            with open(tmp, "wb") as f:
+                f.write(_MAGIC)
+                f.write(len(header).to_bytes(8, "little"))
+                f.write(header)
+                for raw in chunks:
+                    f.write(raw)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        self.writes += 1
+        return path
+
+    # -- read ----------------------------------------------------------------
+
+    def get(self, key: str) -> Optional[Dict]:
+        """Load the record stored under ``key``: ``{"spec": {leaves, meta,
+        config}, "tuning", "summary"}`` — or None (miss) when absent,
+        version-stale, or corrupt.  Leaves come back as numpy arrays at
+        their exact stored dtypes (bfloat16 included)."""
+        path = self._file(key)
+        if not os.path.exists(path):
+            self.misses += 1
+            return None
+        try:
+            with open(path, "rb") as f:
+                blob = f.read()
+            if blob[: len(_MAGIC)] != _MAGIC:
+                raise ValueError("bad magic")
+            hlen_at = len(_MAGIC)
+            hlen = int.from_bytes(blob[hlen_at : hlen_at + 8], "little")
+            body_at = hlen_at + 8 + hlen
+            header = json.loads(blob[hlen_at + 8 : body_at].decode())
+            if header.get("format_version") != FORMAT_VERSION:
+                self.stale += 1
+                self.misses += 1
+                return None
+            leaves = {}
+            for rec in header["arrays"]:
+                start = body_at + rec["offset"]
+                stop = start + rec["nbytes"]
+                if stop > len(blob):
+                    raise ValueError("truncated array bytes")
+                leaves[rec["name"]] = np.frombuffer(
+                    blob[start:stop], dtype=jnp.dtype(rec["dtype"])
+                ).reshape(rec["shape"])
+            spec = {
+                "leaves": leaves,
+                "meta": _tuplify(header["meta"]),
+                "config": header.get("config"),
+            }
+        except Exception:
+            self.corrupt += 1
+            self.misses += 1
+            return None
+        self.hits += 1
+        return {
+            "spec": spec,
+            "tuning": header.get("tuning"),
+            "summary": header.get("summary"),
+        }
+
+    # -- introspection -------------------------------------------------------
+
+    def __contains__(self, key: str) -> bool:
+        return os.path.exists(self._file(key))
+
+    def __len__(self) -> int:
+        return sum(
+            1 for name in os.listdir(self.path) if name.endswith(".gustplan")
+        )
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "writes": self.writes,
+            "corrupt": self.corrupt,
+            "stale": self.stale,
+            "entries": len(self),
+        }
+
+    def __repr__(self) -> str:
+        return f"PlanStore({self.path!r}, entries={len(self)})"

@@ -28,14 +28,72 @@ All three satisfy: validity, completeness, C_w >= Δ_w (Eq. 1 bound).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import hashlib
+import os
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .formats import COOMatrix, GustSchedule
 from .load_balance import balance_lanes, balance_rows
 
-__all__ = ["schedule", "color_edges_fast", "color_edges_paper", "color_edges_exact"]
+__all__ = [
+    "schedule",
+    "color_edges_fast",
+    "color_edges_paper",
+    "color_edges_exact",
+    "color_windows_chunked",
+    "incremental_schedule",
+    "window_fingerprints",
+    "resolve_workers",
+    "sched_counters",
+    "reset_sched_counters",
+    "DEFAULT_PARALLEL_MIN_EDGES",
+]
+
+#: Host-side observability counters.  ``color_calls`` / ``colored_edges``
+#: count invocations of any colorer through :func:`schedule` or
+#: :func:`incremental_schedule` — a PlanStore warm start must leave them
+#: untouched (the zero-coloring-work gate in ``benchmarks/sched_bench.py``).
+#: ``parallel_chunks`` counts chunks actually colored by worker processes
+#: (0 when the serial fallback ran), ``windows_recolored`` /
+#: ``windows_reused`` track incremental rescheduling.
+sched_counters: Dict[str, int] = {
+    "color_calls": 0,
+    "colored_edges": 0,
+    "parallel_chunks": 0,
+    "windows_recolored": 0,
+    "windows_reused": 0,
+}
+
+
+def reset_sched_counters() -> Dict[str, int]:
+    """Zero all scheduler counters; returns the (mutable) counter dict."""
+    for k in sched_counters:
+        sched_counters[k] = 0
+    return sched_counters
+
+
+#: Below this many edges an automatic (``workers=None``) schedule stays
+#: serial: process fan-out + shared-memory setup costs ~tens of ms, which
+#: only pays off once coloring itself is in the hundreds-of-ms range.
+DEFAULT_PARALLEL_MIN_EDGES = 2_000_000
+
+_ENV_WORKERS = "REPRO_SCHED_WORKERS"
+
+
+def resolve_workers(workers: Optional[int]) -> int:
+    """The one decision point for scheduling concurrency: explicit argument,
+    else ``REPRO_SCHED_WORKERS``, else ``os.cpu_count()``."""
+    if workers is not None:
+        return max(int(workers), 1)
+    env = os.environ.get(_ENV_WORKERS, "").strip()
+    if env:
+        try:
+            return max(int(env), 1)
+        except ValueError:
+            pass
+    return max(os.cpu_count() or 1, 1)
 
 
 # ---------------------------------------------------------------------------
@@ -43,31 +101,46 @@ __all__ = ["schedule", "color_edges_fast", "color_edges_paper", "color_edges_exa
 # ---------------------------------------------------------------------------
 
 
+def _edge_index_dtype(m: int, n: int, nnz: int, l: int) -> np.dtype:
+    """Index-dtype policy for the scheduler's edge arrays: int32 whenever
+    every value they hold — row/col indices, nnz, and the globalized keys
+    ``win*l + local`` (bounded by ceil(m/l)*l + l) — fits, else int64.
+    Halves scheduler peak memory on large (but sub-2G) matrices."""
+    num_windows = max(-(-m // l), 1)
+    key_bound = num_windows * l + l
+    if max(m, n, nnz, key_bound) < np.iinfo(np.int32).max:
+        return np.dtype(np.int32)
+    return np.dtype(np.int64)
+
+
 def _build_edges(
     coo: COOMatrix, l: int, load_balance: bool
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Returns (win, row_local, lane, col, val, row_perm) sorted by
-    (win, row_local, col) — the LIL order Listing 1 consumes."""
+    (win, row_local, col) — the LIL order Listing 1 consumes.  Integer
+    outputs use :func:`_edge_index_dtype` (int32 when everything fits)."""
     m, n = coo.shape
+    idx = _edge_index_dtype(m, n, coo.rows.shape[0], l)
     if load_balance:
         row_perm, new_rows = balance_rows(coo)
+        new_rows = new_rows.astype(idx, copy=False)
     else:
         row_perm = np.arange(m, dtype=np.int64)
-        new_rows = coo.rows.astype(np.int64)
+        new_rows = coo.rows.astype(idx)
 
     win = new_rows // l
     row_local = new_rows - win * l
     if load_balance:
-        lane = balance_lanes(win, coo.cols, l, n)
+        lane = balance_lanes(win, coo.cols, l, n).astype(idx, copy=False)
     else:
-        lane = (coo.cols % l).astype(np.int64)
+        lane = (coo.cols % l).astype(idx)
 
     order = np.lexsort((coo.cols, row_local, win))
     return (
         win[order],
         row_local[order],
         lane[order],
-        coo.cols[order].astype(np.int64),
+        coo.cols[order].astype(idx),
         coo.vals[order],
         row_perm,
     )
@@ -84,18 +157,22 @@ def color_edges_paper(row_key: np.ndarray, lane_key: np.ndarray) -> np.ndarray:
     (row_key, intra-row order).  Returns per-edge colors."""
     e = row_key.shape[0]
     colors = np.full(e, -1, dtype=np.int64)
-    # Per-row edge lists (indices into the edge arrays).
+    # Per-row edge lists (indices into the edge arrays).  ``np.unique``
+    # returns rows already ascending, so iterating this list *is* the
+    # paper's in-order left-vertex sweep — a ``done`` mask replaces the
+    # old per-round ``sorted(dict)`` rebuild (O(rows log rows) per color).
     rows, row_starts = np.unique(row_key, return_index=True)
-    row_edges = {}
     bounds = np.append(row_starts, e)
-    for i, r in enumerate(rows):
-        row_edges[int(r)] = list(range(bounds[i], bounds[i + 1]))
+    row_edges = [list(range(bounds[i], bounds[i + 1])) for i in range(rows.shape[0])]
+    done = [False] * rows.shape[0]
+    remaining = rows.shape[0]
     clr = 0
-    while row_edges:
+    while remaining:
         matching = set()
-        done_rows = []
-        for r in sorted(row_edges):  # iterate left vertices in order
-            edges = row_edges[r]
+        for i in range(rows.shape[0]):  # iterate left vertices in order
+            if done[i]:
+                continue
+            edges = row_edges[i]
             for pos, eidx in enumerate(edges):
                 lk = int(lane_key[eidx])
                 if lk not in matching:
@@ -104,9 +181,8 @@ def color_edges_paper(row_key: np.ndarray, lane_key: np.ndarray) -> np.ndarray:
                     edges.pop(pos)
                     break  # paper's break: one edge per row per color
             if not edges:
-                done_rows.append(r)
-        for r in done_rows:
-            del row_edges[r]
+                done[i] = True
+                remaining -= 1
         clr += 1
     return colors
 
@@ -114,7 +190,66 @@ def color_edges_paper(row_key: np.ndarray, lane_key: np.ndarray) -> np.ndarray:
 def color_edges_fast(row_key: np.ndarray, lane_key: np.ndarray) -> np.ndarray:
     """Vectorized greedy maximal-matching coloring (see module docstring).
     Edges must be sorted by (row_key, intra-row order); keys globally
-    unique per window."""
+    unique per window.
+
+    The proposal loop is O(e) per round: candidate indices stay ascending,
+    so ``row_key[elig]`` is a sequence of runs and the first edge of each
+    run is that row's first eligible edge — a boundary scan replaces the
+    old ``np.unique(..., return_index=True)`` sort.  Lane-conflict
+    resolution uses an indexed scatter (last write wins on the reversed
+    position array == smallest proposal index per lane), which picks the
+    same lowest-row winner the old first-occurrence rule picked — colors
+    are bit-identical to :func:`_color_edges_fast_reference`."""
+    e = row_key.shape[0]
+    colors = np.full(e, -1, dtype=np.int64)
+    if e == 0:
+        return colors
+    n_rows = int(row_key.max()) + 1
+    n_lanes = int(lane_key.max()) + 1
+    alive_idx = np.arange(e, dtype=np.int64)  # sorted by (row, order)
+    lane_min_pos = np.empty(n_lanes, dtype=np.int64)  # scratch, per proposal round
+    clr = 0
+    while alive_idx.size:
+        lane_busy = np.zeros(n_lanes, dtype=bool)
+        row_done = np.zeros(n_rows, dtype=bool)
+        cand = alive_idx
+        while cand.size:
+            elig = cand[~row_done[row_key[cand]] & ~lane_busy[lane_key[cand]]]
+            if elig.size == 0:
+                break
+            # First eligible edge per row: elig is ascending, edges are
+            # row-order sorted, so run starts in row_key[elig] are exactly
+            # the first eligible edge per row.
+            rk = row_key[elig]
+            head = np.empty(elig.size, dtype=bool)
+            head[0] = True
+            np.not_equal(rk[1:], rk[:-1], out=head[1:])
+            proposals = elig[head]
+            # Lane conflicts: lower row wins (proposals are row-ascending).
+            # Writing positions in reverse makes the *smallest* position
+            # per lane the surviving write.
+            lk = lane_key[proposals]
+            pos = np.arange(proposals.size, dtype=np.int64)
+            lane_min_pos[lk[::-1]] = pos[::-1]
+            winners = proposals[lane_min_pos[lk] == pos]
+            colors[winners] = clr
+            lane_busy[lane_key[winners]] = True
+            row_done[row_key[winners]] = True
+            if winners.size == proposals.size:
+                # every proposing row matched; remaining rows had no
+                # eligible edge at proposal time -> re-scan survivors once
+                cand = elig if elig.size > winners.size else np.empty(0, np.int64)
+            else:
+                cand = elig  # losers re-propose against updated busy sets
+        alive_idx = alive_idx[colors[alive_idx] < 0]
+        clr += 1
+    return colors
+
+
+def _color_edges_fast_reference(row_key: np.ndarray, lane_key: np.ndarray) -> np.ndarray:
+    """Pre-PR-7 ``color_edges_fast`` inner loop (np.unique-based selection).
+    Kept as the bit-identity oracle for the O(e) rewrite and as the serial
+    baseline in ``benchmarks/sched_bench.py``."""
     e = row_key.shape[0]
     colors = np.full(e, -1, dtype=np.int64)
     if e == 0:
@@ -141,8 +276,6 @@ def color_edges_fast(row_key: np.ndarray, lane_key: np.ndarray) -> np.ndarray:
             lane_busy[lane_key[winners]] = True
             row_done[row_key[winners]] = True
             if winners.size == proposals.size:
-                # every proposing row matched; remaining rows had no
-                # eligible edge at proposal time -> re-scan survivors once
                 cand = elig if elig.size > winners.size else np.empty(0, np.int64)
             else:
                 cand = elig  # losers re-propose against updated busy sets
@@ -305,8 +438,172 @@ _COLORERS = {
 
 
 # ---------------------------------------------------------------------------
+# Parallel window-chunked coloring
+# ---------------------------------------------------------------------------
+#
+# Windows are independent coloring problems: globalized keys (win*l + local)
+# never collide across windows, and every window's edges receive colors
+# 0..C_w-1 regardless of what other windows contain.  Coloring a contiguous
+# run of whole windows in one process therefore produces *bit-identical*
+# colors to the serial pass — chunk boundaries only have to land on window
+# boundaries.  Workers attach a shared int64 buffer holding
+# (row_key, lane_key, colors-out), so the only per-chunk IPC is five ints.
+
+
+def _chunk_bounds(
+    win: np.ndarray, num_windows: int, n_chunks: int
+) -> Sequence[Tuple[int, int, int]]:
+    """Split the edge stream into <= ``n_chunks`` contiguous, window-aligned
+    ranges with roughly equal edge counts.  Returns (start, stop, first_win)
+    edge-index triples; empty ranges are dropped."""
+    e = win.shape[0]
+    # Edge offset of each window boundary.
+    w_off = np.searchsorted(win, np.arange(num_windows + 1))
+    targets = (np.arange(1, n_chunks) * e) // n_chunks
+    cut_wins = np.unique(
+        np.concatenate(
+            [[0], np.searchsorted(w_off, targets, side="left"), [num_windows]]
+        )
+    )
+    cut_wins = cut_wins[cut_wins <= num_windows]
+    bounds = []
+    for i in range(cut_wins.shape[0] - 1):
+        s, t = int(w_off[cut_wins[i]]), int(w_off[cut_wins[i + 1]])
+        if t > s:
+            bounds.append((s, t, int(cut_wins[i])))
+    return bounds
+
+
+def _color_chunk_worker(shm_name: str, e: int, s: int, t: int, base: int) -> int:
+    """Color edges [s, t) of the shared (3, e) buffer in place.  ``base``
+    re-localizes the globalized keys so scratch arrays are chunk-sized."""
+    from multiprocessing import shared_memory
+
+    shm = shared_memory.SharedMemory(name=shm_name)
+    try:
+        buf = np.ndarray((3, e), dtype=np.int64, buffer=shm.buf)
+        buf[2, s:t] = color_edges_fast(buf[0, s:t] - base, buf[1, s:t] - base)
+    finally:
+        shm.close()
+    return s
+
+
+def color_windows_chunked(
+    row_key: np.ndarray,
+    lane_key: np.ndarray,
+    win: np.ndarray,
+    num_windows: int,
+    l: int,
+    *,
+    workers: Optional[int] = None,
+    min_edges: Optional[int] = None,
+) -> np.ndarray:
+    """Fast coloring with window-chunked process parallelism.
+
+    Bit-identical to ``color_edges_fast(row_key, lane_key)`` by window
+    independence (see section comment).  Falls back to the serial colorer
+    when parallelism can't help (one worker, too few edges or windows) or
+    can't run (no fork start method, shared memory unavailable) — an
+    explicit ``workers >= 2`` skips the ``min_edges`` threshold so small
+    inputs can exercise the parallel path deterministically."""
+    e = row_key.shape[0]
+    n_workers = resolve_workers(workers)
+    if min_edges is None:
+        min_edges = DEFAULT_PARALLEL_MIN_EDGES if workers is None else 0
+    if n_workers < 2 or e == 0 or e < min_edges or num_windows < 2:
+        return color_edges_fast(row_key, lane_key)
+
+    import multiprocessing as mp
+
+    if "fork" not in mp.get_all_start_methods():
+        # spawn would re-import the caller's __main__; not worth the risk
+        # for a pure perf path — the serial colorer is always correct.
+        return color_edges_fast(row_key, lane_key)
+
+    chunks = _chunk_bounds(win, num_windows, n_chunks=n_workers)
+    if len(chunks) < 2:
+        return color_edges_fast(row_key, lane_key)
+
+    from concurrent.futures import ProcessPoolExecutor
+    from multiprocessing import shared_memory
+
+    try:
+        shm = shared_memory.SharedMemory(create=True, size=3 * e * 8)
+    except Exception:
+        return color_edges_fast(row_key, lane_key)
+    try:
+        buf = np.ndarray((3, e), dtype=np.int64, buffer=shm.buf)
+        np.copyto(buf[0], row_key, casting="safe")
+        np.copyto(buf[1], lane_key, casting="safe")
+        ctx = mp.get_context("fork")
+        with ProcessPoolExecutor(max_workers=len(chunks), mp_context=ctx) as pool:
+            futures = [
+                pool.submit(_color_chunk_worker, shm.name, e, s, t, base * l)
+                for (s, t, base) in chunks
+            ]
+            for f in futures:
+                f.result()
+        colors = buf[2].copy()
+        sched_counters["parallel_chunks"] += len(chunks)
+        return colors
+    except Exception:
+        return color_edges_fast(row_key, lane_key)
+    finally:
+        shm.close()
+        shm.unlink()
+
+
+def _color_edges(
+    method: str,
+    win: np.ndarray,
+    row_local: np.ndarray,
+    lane: np.ndarray,
+    num_windows: int,
+    l: int,
+    workers: Optional[int],
+) -> np.ndarray:
+    """Dispatch to the requested colorer over an edge stream sorted by
+    (win, row_local, col); counts the call in :data:`sched_counters`."""
+    e = win.shape[0]
+    sched_counters["color_calls"] += 1
+    sched_counters["colored_edges"] += int(e)
+    if method == "exact":
+        # Per-window exact coloring (windows are independent graphs).
+        colors = np.empty(e, dtype=np.int64)
+        w_ids, w_starts = np.unique(win, return_index=True)
+        bounds = np.append(w_starts, e)
+        for i in range(w_ids.shape[0]):
+            s, t = bounds[i], bounds[i + 1]
+            colors[s:t] = color_edges_exact(row_local[s:t], lane[s:t])
+        return colors
+    # Globalized keys let one pass color every window at once (the index
+    # dtype policy guarantees win*l + local fits the edge dtype).
+    row_key = win * l + row_local
+    lane_key = win * l + lane
+    if method == "fast":
+        return color_windows_chunked(
+            row_key, lane_key, win, num_windows, l, workers=workers
+        )
+    return _COLORERS[method](row_key, lane_key)
+
+
+# ---------------------------------------------------------------------------
 # Full scheduling pipeline (Listing 1 + Listing 2)
 # ---------------------------------------------------------------------------
+
+
+def _alloc_tables(c_total: int, l: int, value_dtype):
+    """Listing 2 output tables, padding-initialized: value 0, row 0, and
+    col == lane.  Padding slots gather v[lane] and multiply by 0 — always
+    safe: the execution paths zero-pad v to ceil(n/l)*l (jnp.take clamps
+    when not), and col==lane preserves the lane structure the fused kernel
+    needs."""
+    rows = max(c_total, 1)
+    m_sch = np.zeros((rows, l), dtype=value_dtype)
+    row_sch = np.zeros((rows, l), dtype=np.int32)
+    col_sch = np.tile(np.arange(l, dtype=np.int32), (rows, 1))
+    valid = np.zeros((rows, l), dtype=bool)
+    return m_sch, row_sch, col_sch, valid
 
 
 def schedule(
@@ -316,8 +613,15 @@ def schedule(
     load_balance: bool = True,
     method: str = "fast",
     value_dtype=np.float32,
+    workers: Optional[int] = None,
 ) -> GustSchedule:
-    """Preprocess a sparse matrix into the GUST scheduled format."""
+    """Preprocess a sparse matrix into the GUST scheduled format.
+
+    ``workers`` controls window-chunked parallel coloring for
+    ``method="fast"`` (None = auto: ``REPRO_SCHED_WORKERS`` else cpu count,
+    applied only above :data:`DEFAULT_PARALLEL_MIN_EDGES` edges).  The
+    schedule is bit-identical for every worker count, so ``workers`` is
+    *not* part of any cache or store key."""
     if method not in _COLORERS:
         raise ValueError(f"unknown coloring method {method!r}")
     m, n = coo.shape
@@ -327,19 +631,7 @@ def schedule(
     e = win.shape[0]
 
     if e:
-        if method == "exact":
-            # Per-window exact coloring (windows are independent graphs).
-            colors = np.empty(e, dtype=np.int64)
-            w_ids, w_starts = np.unique(win, return_index=True)
-            bounds = np.append(w_starts, e)
-            for i in range(w_ids.shape[0]):
-                s, t = bounds[i], bounds[i + 1]
-                colors[s:t] = color_edges_exact(row_local[s:t], lane[s:t])
-        else:
-            # Globalized keys let one pass color every window at once.
-            row_key = win * l + row_local
-            lane_key = win * l + lane
-            colors = _COLORERS[method](row_key, lane_key)
+        colors = _color_edges(method, win, row_local, lane, num_windows, l, workers)
     else:
         colors = np.empty(0, dtype=np.int64)
 
@@ -352,13 +644,7 @@ def schedule(
     c_total = int(window_starts[-1])
 
     # Listing 2: materialize M_sch / Row_sch / Col_sch.
-    m_sch = np.zeros((max(c_total, 1), l), dtype=value_dtype)
-    row_sch = np.zeros((max(c_total, 1), l), dtype=np.int32)
-    # Padding slots gather v[lane] and multiply by 0 — always safe: the
-    # execution paths zero-pad v to ceil(n/l)*l (jnp.take clamps when not),
-    # and col==lane preserves the lane structure the fused kernel needs.
-    col_sch = np.tile(np.arange(l, dtype=np.int32), (max(c_total, 1), 1))
-    valid = np.zeros((max(c_total, 1), l), dtype=bool)
+    m_sch, row_sch, col_sch, valid = _alloc_tables(c_total, l, value_dtype)
     if e:
         gcycle = window_starts[win] + colors
         if valid[gcycle, lane].any() or np.unique(gcycle * l + lane).size != e:
@@ -379,3 +665,168 @@ def schedule(
         row_perm=row_perm,
         valid=valid,
     )
+
+
+# ---------------------------------------------------------------------------
+# Incremental re-scheduling (dirty-window re-coloring)
+# ---------------------------------------------------------------------------
+
+
+def _window_hashes(
+    win: np.ndarray,
+    row_local: np.ndarray,
+    col: np.ndarray,
+    val: np.ndarray,
+    num_windows: int,
+) -> np.ndarray:
+    """sha1 fingerprint of each window's edge content.  Hashed over
+    canonical dtypes (int64 indices, float64 values) so the fingerprint is
+    independent of the edge-array index-dtype policy."""
+    e = win.shape[0]
+    bounds = np.searchsorted(win, np.arange(num_windows + 1))
+    rl64 = np.ascontiguousarray(row_local, dtype=np.int64)
+    c64 = np.ascontiguousarray(col, dtype=np.int64)
+    v64 = np.ascontiguousarray(val, dtype=np.float64)
+    out = np.empty(num_windows, dtype="S20")
+    for w in range(num_windows):
+        s, t = int(bounds[w]), int(bounds[w + 1])
+        h = hashlib.sha1()
+        h.update(rl64[s:t].tobytes())
+        h.update(c64[s:t].tobytes())
+        h.update(v64[s:t].tobytes())
+        out[w] = h.digest()
+    return out
+
+
+def window_fingerprints(coo: COOMatrix, l: int) -> np.ndarray:
+    """Per-window content fingerprints under the ``load_balance=False``
+    window assignment (win = row // l) — the diff key for
+    :func:`incremental_schedule`."""
+    win, row_local, _, col, val, _ = _build_edges(coo, l, False)
+    num_windows = max(-(-coo.shape[0] // l), 1)
+    return _window_hashes(win, row_local, col, val, num_windows)
+
+
+def _ranges(starts: np.ndarray, lengths: np.ndarray) -> np.ndarray:
+    """Concatenation of arange(start, start+length) per pair — vectorized
+    multi-slice index construction."""
+    lengths = np.asarray(lengths, dtype=np.int64)
+    total = int(lengths.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64)
+    out = np.repeat(np.asarray(starts, dtype=np.int64), lengths)
+    resets = np.repeat(np.cumsum(lengths) - lengths, lengths)
+    return out + (np.arange(total, dtype=np.int64) - resets)
+
+
+def incremental_schedule(
+    old_sched: GustSchedule,
+    new_coo: COOMatrix,
+    *,
+    old_coo: Optional[COOMatrix] = None,
+    old_hashes: Optional[np.ndarray] = None,
+    method: str = "fast",
+    workers: Optional[int] = None,
+) -> Tuple[GustSchedule, np.ndarray, np.ndarray]:
+    """Re-schedule ``new_coo`` reusing ``old_sched`` wherever possible.
+
+    Diffs per-window content fingerprints, recolors only the dirty
+    windows, and splices their cycles into a fresh global table; clean
+    windows' schedule rows are copied verbatim.  Because windows are
+    independent coloring problems, the result is **bit-identical** to a
+    fresh ``schedule(new_coo, l, load_balance=False, method=...)``.
+
+    Only valid for ``load_balance=False`` schedules: row balancing is a
+    global function of the whole matrix, so any content change could
+    reassign every window.  ``old_sched.row_perm`` must be the identity.
+
+    Returns ``(new_sched, dirty_windows, new_hashes)``; pass ``new_hashes``
+    back as ``old_hashes`` on the next delta to skip re-hashing the old
+    side.  Counts windows in ``sched_counters`` (windows_recolored /
+    windows_reused)."""
+    if method not in _COLORERS:
+        raise ValueError(f"unknown coloring method {method!r}")
+    l = old_sched.l
+    m, n = old_sched.shape
+    if tuple(new_coo.shape) != (m, n):
+        raise ValueError(
+            f"incremental_schedule: shape changed {old_sched.shape} -> "
+            f"{tuple(new_coo.shape)}; build a fresh plan instead"
+        )
+    if not np.array_equal(old_sched.row_perm, np.arange(m)):
+        raise ValueError(
+            "incremental_schedule requires a load_balance=False schedule "
+            "(row_perm must be identity)"
+        )
+    num_windows = old_sched.num_windows
+
+    win, row_local, lane, col, val, row_perm = _build_edges(new_coo, l, False)
+    e = win.shape[0]
+    new_hashes = _window_hashes(win, row_local, col, val, num_windows)
+    if old_hashes is None:
+        if old_coo is None:
+            raise ValueError("incremental_schedule needs old_coo or old_hashes")
+        old_hashes = window_fingerprints(old_coo, l)
+    old_hashes = np.asarray(old_hashes)
+    if old_hashes.shape != new_hashes.shape:
+        raise ValueError("old_hashes has wrong window count")
+
+    dirty_mask = old_hashes != new_hashes
+    dirty = np.nonzero(dirty_mask)[0]
+    clean = np.nonzero(~dirty_mask)[0]
+    sched_counters["windows_recolored"] += int(dirty.size)
+    sched_counters["windows_reused"] += int(clean.size)
+
+    # --- recolor dirty windows only -------------------------------------
+    edge_dirty = dirty_mask[win]
+    d_idx = np.nonzero(edge_dirty)[0]
+    cpw_old = np.diff(old_sched.window_starts)
+    cpw_new = cpw_old.copy()
+    cpw_new[dirty] = 0  # dirty windows that became empty stay at 0 colors
+    if d_idx.size:
+        colors_d = _color_edges(
+            method,
+            win[d_idx],
+            row_local[d_idx],
+            lane[d_idx],
+            num_windows,
+            l,
+            workers,
+        )
+        np.maximum.at(cpw_new, win[d_idx], colors_d + 1)
+
+    window_starts = np.zeros(num_windows + 1, dtype=np.int64)
+    np.cumsum(cpw_new, out=window_starts[1:])
+    c_total = int(window_starts[-1])
+
+    # --- splice: copy clean windows' rows, scatter dirty edges ----------
+    m_sch, row_sch, col_sch, valid = _alloc_tables(c_total, l, old_sched.m_sch.dtype)
+    if clean.size:
+        src = _ranges(old_sched.window_starts[clean], cpw_old[clean])
+        dst = _ranges(window_starts[clean], cpw_old[clean])
+        m_sch[dst] = old_sched.m_sch[src]
+        row_sch[dst] = old_sched.row_sch[src]
+        col_sch[dst] = old_sched.col_sch[src]
+        valid[dst] = old_sched.valid[src]
+    if d_idx.size:
+        lane_d = lane[d_idx]
+        gcycle = window_starts[win[d_idx]] + colors_d
+        if valid[gcycle, lane_d].any() or np.unique(gcycle * l + lane_d).size != d_idx.size:
+            raise AssertionError("collision in incremental schedule")
+        m_sch[gcycle, lane_d] = val[d_idx].astype(old_sched.m_sch.dtype)
+        row_sch[gcycle, lane_d] = row_local[d_idx].astype(np.int32)
+        col_sch[gcycle, lane_d] = col[d_idx].astype(np.int32)
+        valid[gcycle, lane_d] = True
+
+    new_sched = GustSchedule(
+        l=l,
+        shape=(m, n),
+        nnz=e,
+        m_sch=m_sch,
+        row_sch=row_sch,
+        col_sch=col_sch,
+        window_starts=window_starts,
+        row_perm=row_perm,
+        valid=valid,
+    )
+    return new_sched, dirty, new_hashes

@@ -51,6 +51,7 @@ def run_serving(
     use_kernel: bool = False,
     ragged: bool = False,
     compact: bool = False,
+    plan_store: str = None,
     serial: bool = False,
     temperature: float = 0.0,
     eos_id=None,
@@ -65,7 +66,7 @@ def run_serving(
     if gust:
         gcfg = GustServeConfig(
             density=density, gust_length=gust_length, use_kernel=use_kernel,
-            ragged=ragged, compact=compact,
+            ragged=ragged, compact=compact, plan_store=plan_store,
         )
     sc = ServeConfig(batch=batch, seq_len=seq_len, dtype="float32", gust=gcfg,
                      temperature=temperature, eos_id=eos_id,
@@ -103,13 +104,19 @@ def run_serving(
         "gust": bool(gust),
     }
     if gust and loop.gust_tree is not None:
+        # per-matrix entries only — "plan_store" is the store's counter dict
+        mat_stats = {
+            k: v for k, v in loop.gust_tree["stats"].items()
+            if k != "plan_store"
+        }
         stats["gust_stream_utilization"] = {
-            k: round(v["stream_utilization"], 4)
-            for k, v in loop.gust_tree["stats"].items()
+            k: round(v["stream_utilization"], 4) for k, v in mat_stats.items()
         }
         stats["gust_streamed_slots"] = {
-            k: v["streamed_slots"] for k, v in loop.gust_tree["stats"].items()
+            k: v["streamed_slots"] for k, v in mat_stats.items()
         }
+        if "plan_store" in loop.gust_tree["stats"]:
+            stats["gust_plan_store"] = loop.gust_tree["stats"]["plan_store"]
     return done, stats
 
 
@@ -132,6 +139,9 @@ def main():
     ap.add_argument("--compact", action="store_true",
                     help="bf16 values + int16 indices: halves the streamed "
                     "schedule bytes (the paper's packed-word analogue)")
+    ap.add_argument("--plan-store", type=str, default=None,
+                    help="directory for the persistent PlanStore: warm "
+                    "starts load packed plans off disk with zero coloring")
     ap.add_argument("--serial", action="store_true",
                     help="one-request-at-a-time baseline (default is "
                     "continuous batching over the admission queue)")
@@ -144,7 +154,8 @@ def main():
         requests=args.requests, prompt_len=args.prompt_len,
         max_new=args.max_new, gust=args.gust, density=args.density,
         gust_length=args.gust_length, use_kernel=args.use_kernel,
-        ragged=args.ragged, compact=args.compact, serial=args.serial,
+        ragged=args.ragged, compact=args.compact,
+        plan_store=args.plan_store, serial=args.serial,
         temperature=args.temperature, eos_id=args.eos_id,
     )
     print(json.dumps(stats))

@@ -1,0 +1,401 @@
+"""PlanStore + incremental reschedule: persistence and splice contracts
+(ISSUE 7).
+
+The acceptance bar: parallel, incremental, and store-loaded plans are
+**bitwise-identical in execution** to a fresh serial plan on both
+layouts, both gathers, and both value dtypes; a warm store start does
+zero coloring work; loads tolerate corrupt/stale files; the counters
+surface on ``GustPlan.cost()``; and ``ScheduleCache`` is LRU-bounded
+with counted evictions.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import SRC
+from repro.core.formats import coo_from_dense
+from repro.core.packing import (
+    DEFAULT_SCHEDULE_CACHE_SIZE,
+    RaggedSchedule,
+    ScheduleCache,
+    packed_leaves,
+    ragged_leaves,
+    splice_ragged_blocks,
+)
+from repro.core.plan import GustPlan, PlanConfig, plan, reschedule
+from repro.core.plan_store import ARTIFACT_KNOBS, FORMAT_VERSION, PlanStore
+from repro.core.scheduler import reset_sched_counters, sched_counters
+
+
+def random_dense(seed=0, m=40, n=48, density=0.25):
+    rng = np.random.default_rng(seed)
+    return ((rng.random((m, n)) < density)
+            * rng.standard_normal((m, n))).astype(np.float32)
+
+
+def probe(seed, n, b=3):
+    rng = np.random.default_rng(seed + 1000)
+    return jnp.asarray(rng.standard_normal((n, b)).astype(np.float32))
+
+
+def leaves_bitwise_equal(a, b):
+    assert type(a) is type(b)
+    to_leaves = ragged_leaves if isinstance(a, RaggedSchedule) else packed_leaves
+    la, lb = to_leaves(a), to_leaves(b)
+    assert sorted(la) == sorted(lb)
+    for k in la:
+        if la[k] is None or lb[k] is None:
+            assert la[k] is None and lb[k] is None, k
+            continue
+        va, vb = np.asarray(la[k]), np.asarray(lb[k])
+        assert va.dtype == vb.dtype, k
+        assert np.array_equal(va, vb), k
+
+
+# ---------------------------------------------------------------------------
+# Round-trip: both layouts x both gathers x both value dtypes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layout", ["padded", "ragged"])
+@pytest.mark.parametrize("vdt", ["float32", "int8"])
+def test_store_roundtrip_bitwise(tmp_path, layout, vdt):
+    dense = random_dense(seed=hash((layout, vdt)) % 100)
+    store = PlanStore(str(tmp_path))
+    x = probe(0, dense.shape[1])
+    outs = {}
+    for gather in ("resident", "local"):
+        cfg = PlanConfig(l=8, layout=layout, value_dtype=vdt, gather=gather,
+                         load_balance=False)
+        cold = plan(dense, cfg, cache=None, store=store)
+        y_cold = np.asarray(cold.spmm(x))
+        # fresh process simulation: no schedule cache, store only
+        reset_sched_counters()
+        warm = plan(dense, cfg, cache=None, store=store)
+        assert warm._store_loaded
+        assert warm.sched is None  # artifact-only plan
+        assert sched_counters["color_calls"] == 0
+        leaves_bitwise_equal(cold.artifact, warm.artifact)
+        y_warm = np.asarray(warm.spmm(x))
+        assert np.array_equal(y_cold, y_warm)
+        outs[gather] = y_cold
+    # both gathers share ONE store entry (gather is an execution knob)
+    assert len(store) == 1
+    assert np.array_equal(outs["resident"], outs["local"])
+
+
+def test_store_warm_summary_and_stats(tmp_path):
+    dense = random_dense(3)
+    store = PlanStore(str(tmp_path))
+    cfg = PlanConfig(l=8, load_balance=False)
+    cold = plan(dense, cfg, cache=None, store=store)
+    cold.artifact  # materialize -> write-behind
+    warm = plan(dense, cfg, cache=None, store=store)
+    assert warm.summary is not None
+    assert warm.summary["cycles"] == cold.sched.cycles
+    assert warm.summary["nnz"] == cold.sched.nnz
+    st = store.stats()
+    assert st["hits"] == 1 and st["writes"] == 1 and st["entries"] == 1
+
+
+def test_cost_surfaces_store_and_cache_counters(tmp_path):
+    dense = random_dense(4)
+    store = PlanStore(str(tmp_path))
+    cache = ScheduleCache()
+    cfg = PlanConfig(l=8, load_balance=False)
+    p = plan(dense, cfg, cache=cache, store=store)
+    p.artifact
+    c = p.cost()
+    assert c.store_misses == 1 and c.store_hits == 0
+    assert c.cache_evictions == 0
+    p2 = plan(dense, cfg, cache=cache, store=store)
+    assert p2._store_loaded
+    # store-loaded plans can't cost() (no schedule) — counters live on the
+    # fresh plan's cost and on store.stats()
+    assert store.hits == 1
+
+
+# ---------------------------------------------------------------------------
+# Keying: execution knobs excluded, artifact knobs included
+# ---------------------------------------------------------------------------
+
+
+def test_store_key_excludes_execution_knobs():
+    dense = random_dense(5)
+    mk = ScheduleCache.matrix_key(coo_from_dense(dense))
+    base = PlanConfig(l=8, layout="ragged", load_balance=False)
+    k0 = PlanStore.key(mk, base)
+    import dataclasses
+    for field, val in (("backend", "pallas"), ("gather", "local"),
+                       ("pipeline", "double"), ("interpret", False)):
+        same = dataclasses.replace(base, **{field: val})
+        assert PlanStore.key(mk, same) == k0, field
+    for field, val in (("l", 16), ("layout", "padded"), ("c_blk", 4),
+                       ("value_dtype", "int8"), ("colorer", "exact"),
+                       ("load_balance", True)):
+        diff = dataclasses.replace(base, **{field: val})
+        assert PlanStore.key(mk, diff) != k0, field
+    # and the knob list itself is the documented one
+    assert set(ARTIFACT_KNOBS) == {
+        "l", "colorer", "load_balance", "c_blk", "layout",
+        "waste_threshold", "value_dtype", "index_dtype",
+    }
+
+
+# ---------------------------------------------------------------------------
+# Corruption / version tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_store_tolerates_corrupt_and_stale(tmp_path):
+    dense = random_dense(6)
+    store = PlanStore(str(tmp_path))
+    cfg = PlanConfig(l=8, load_balance=False)
+    p = plan(dense, cfg, cache=None, store=store)
+    p.artifact
+    key = p._store_key
+    path = store._file(key)
+    blob = open(path, "rb").read()
+
+    # truncated file -> corrupt, reads as a miss, never raises
+    open(path, "wb").write(blob[: len(blob) // 2])
+    assert store.get(key) is None
+    assert store.corrupt == 1
+
+    # bad magic -> corrupt
+    open(path, "wb").write(b"NOTAPLAN" + blob[8:])
+    assert store.get(key) is None
+    assert store.corrupt == 2
+
+    # version bump -> stale (clean miss, not corrupt)
+    stale = blob.replace(
+        f'"format_version": {FORMAT_VERSION}'.encode(),
+        f'"format_version": {FORMAT_VERSION + 1}'.encode(),
+    )
+    open(path, "wb").write(stale)
+    assert store.get(key) is None
+    assert store.stale == 1 and store.corrupt == 2
+
+    # a re-plan rewrites the entry and the warm path recovers
+    p2 = plan(dense, cfg, cache=None, store=store)
+    p2.artifact
+    assert store.get(key) is not None
+
+
+def test_store_missing_dir_created_and_atomic_tmp_cleanup(tmp_path):
+    sub = tmp_path / "a" / "b"
+    store = PlanStore(str(sub))
+    assert os.path.isdir(str(sub))
+    dense = random_dense(7)
+    p = plan(dense, PlanConfig(l=8, load_balance=False), cache=None,
+             store=store)
+    p.artifact
+    stray = [f for f in os.listdir(str(sub)) if ".tmp." in f]
+    assert stray == [], "atomic write must not leave temp files"
+
+
+# ---------------------------------------------------------------------------
+# Tuning persistence
+# ---------------------------------------------------------------------------
+
+
+def test_tune_result_persists_through_store(tmp_path):
+    dense = random_dense(8)
+    store = PlanStore(str(tmp_path))
+    cache = ScheduleCache()
+    cfg = PlanConfig(l=8, load_balance=False)
+    p = plan(dense, cfg, cache=cache, store=store)
+    tuned = p.tune(probe(8, dense.shape[1]), c_blks=[8], ls=[8], iters=1,
+                   warmup=0)
+    assert tuned.tuning is not None
+    tuned.artifact  # write-behind carries the TuneResult
+    warm = plan(dense, tuned.config, cache=None, store=store)
+    assert warm._store_loaded
+    assert warm.tuning is not None
+    assert warm.tuning.choice == tuned.tuning.choice
+    leaves_bitwise_equal(warm.artifact, tuned.artifact)
+
+
+# ---------------------------------------------------------------------------
+# New-process round trip (the CI smoke, runnable locally)
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_new_process(tmp_path):
+    dense = random_dense(9)
+    np.save(str(tmp_path / "m.npy"), dense)
+    store = PlanStore(str(tmp_path / "store"))
+    cfg = PlanConfig(l=8, layout="ragged", load_balance=False)
+    p = plan(dense, cfg, cache=None, store=store)
+    y_parent = np.asarray(p.spmm(probe(9, dense.shape[1])))
+    p.artifact  # ensure written
+    code = (
+        "import numpy as np, jax.numpy as jnp\n"
+        "from repro.core.plan import PlanConfig, plan\n"
+        "from repro.core.plan_store import PlanStore\n"
+        "from repro.core.scheduler import sched_counters\n"
+        f"dense = np.load({str(tmp_path / 'm.npy')!r})\n"
+        f"store = PlanStore({str(tmp_path / 'store')!r})\n"
+        "cfg = PlanConfig(l=8, layout='ragged', load_balance=False)\n"
+        "p = plan(dense, cfg, cache=None, store=store)\n"
+        "assert p._store_loaded, 'child must warm-start from the store'\n"
+        "assert sched_counters['color_calls'] == 0\n"
+        "rng = np.random.default_rng(9 + 1000)\n"
+        "x = jnp.asarray(rng.standard_normal((dense.shape[1], 3))"
+        ".astype(np.float32))\n"
+        "np.save(" + repr(str(tmp_path / "y.npy")) + ", np.asarray(p.spmm(x)))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr
+    y_child = np.load(str(tmp_path / "y.npy"))
+    assert np.array_equal(y_parent, y_child)
+
+
+# ---------------------------------------------------------------------------
+# ScheduleCache LRU bound (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_cache_lru_bound_and_evictions():
+    cache = ScheduleCache(maxsize=2)
+    for seed in range(3):
+        plan(random_dense(seed + 20, m=16, n=16), PlanConfig(l=4),
+             cache=cache)
+    st = cache.stats()
+    assert st["entries"] == 2
+    assert st["evictions"] == 1
+    assert cache.evictions == 1
+    # LRU: the *oldest* entry was dropped; newest two still hit
+    hits0 = cache.hits
+    plan(random_dense(22, m=16, n=16), PlanConfig(l=4), cache=cache)
+    assert cache.hits == hits0 + 1
+    plan(random_dense(20, m=16, n=16), PlanConfig(l=4), cache=cache)
+    assert cache.misses >= 4  # oldest was evicted -> re-scheduled
+    cache.clear()
+    assert cache.evictions == 0 and len(cache._store) == 0
+
+
+def test_schedule_cache_maxsize_validation_and_env(monkeypatch):
+    with pytest.raises(ValueError):
+        ScheduleCache(maxsize=0)
+    assert ScheduleCache().maxsize == DEFAULT_SCHEDULE_CACHE_SIZE
+    monkeypatch.setenv("REPRO_SCHEDULE_CACHE_SIZE", "7")
+    assert ScheduleCache().maxsize == 7
+    assert ScheduleCache(maxsize=3).maxsize == 3  # explicit beats env
+
+
+# ---------------------------------------------------------------------------
+# reschedule(): incremental plans + ragged splice
+# ---------------------------------------------------------------------------
+
+
+def _mutate(dense, l=8, w=1, seed=0):
+    rng = np.random.default_rng(seed + 500)
+    new = dense.copy()
+    num_windows = -(-dense.shape[0] // l)
+    dirty = rng.choice(num_windows, size=w, replace=False)
+    for wi in dirty:
+        band = new[wi * l: (wi + 1) * l]
+        band[band != 0] *= 1.25
+        band[rng.integers(band.shape[0]), rng.integers(band.shape[1])] = 2.5
+    return new, np.sort(dirty)
+
+
+@pytest.mark.parametrize("vdt", ["float32", "int8"])
+def test_reschedule_splices_ragged_bitwise(vdt):
+    dense = random_dense(30)
+    cfg = PlanConfig(l=8, layout="ragged", load_balance=False,
+                     value_dtype=vdt)
+    base = plan(dense, cfg, cache=None)
+    base.artifact  # materialize so reschedule can splice
+    new_dense, dirty = _mutate(dense, w=2, seed=30)
+    reset_sched_counters()
+    p = reschedule(base, new_dense)
+    fresh = plan(new_dense, cfg, cache=None)
+    r = p.resched
+    assert not r.full_fallback and r.spliced
+    assert r.dirty_windows <= dirty.size + 0  # content diff, not guess
+    assert r.reused_windows == r.windows - r.dirty_windows
+    assert r.recolored_edges < fresh.sched.nnz, \
+        "incremental must recolor strictly fewer edges than a fresh plan"
+    assert sched_counters["windows_recolored"] == r.dirty_windows
+    leaves_bitwise_equal(p.artifact, fresh.artifact)
+    x = probe(30, dense.shape[1])
+    assert np.array_equal(np.asarray(p.spmm(x)), np.asarray(fresh.spmm(x)))
+    # chained: the returned plan carries fingerprints forward
+    third, _ = _mutate(new_dense, w=1, seed=31)
+    p2 = reschedule(p, third)
+    assert not p2.resched.full_fallback
+    leaves_bitwise_equal(p2.artifact, plan(third, cfg, cache=None).artifact)
+
+
+def test_reschedule_padded_layout_repacks_not_splices():
+    dense = random_dense(32)
+    cfg = PlanConfig(l=8, layout="padded", load_balance=False)
+    base = plan(dense, cfg, cache=None)
+    base.artifact
+    new_dense, _ = _mutate(dense, seed=32)
+    p = reschedule(base, new_dense)
+    assert not p.resched.full_fallback and not p.resched.spliced
+    fresh = plan(new_dense, cfg, cache=None)
+    leaves_bitwise_equal(p.artifact, fresh.artifact)
+
+
+def test_reschedule_load_balance_full_fallback():
+    dense = random_dense(33)
+    cfg = PlanConfig(l=8, load_balance=True)
+    base = plan(dense, cfg, cache=None)
+    new_dense, _ = _mutate(dense, seed=33)
+    p = reschedule(base, new_dense)
+    assert p.resched.full_fallback
+    assert p.resched.dirty_windows == p.resched.windows
+    fresh = plan(new_dense, cfg, cache=None)
+    leaves_bitwise_equal(p.artifact, fresh.artifact)
+
+
+def test_reschedule_writes_spliced_artifact_to_store(tmp_path):
+    dense = random_dense(34)
+    store = PlanStore(str(tmp_path))
+    cfg = PlanConfig(l=8, layout="ragged", load_balance=False)
+    base = plan(dense, cfg, cache=None, store=store)
+    base.artifact
+    new_dense, _ = _mutate(dense, seed=34)
+    p = reschedule(base, new_dense, store=store)
+    assert p.resched.spliced
+    assert store.writes == 2  # base + spliced delta
+    warm = plan(new_dense, cfg, cache=None, store=store)
+    assert warm._store_loaded
+    leaves_bitwise_equal(warm.artifact, p.artifact)
+
+
+def test_reschedule_validation():
+    dense = random_dense(35)
+    cfg = PlanConfig(l=8, load_balance=False)
+    base = plan(dense, cfg, cache=None)
+    with pytest.raises(ValueError, match="shape"):
+        reschedule(base, np.zeros((8, 8), np.float32))
+    with pytest.raises(TypeError):
+        reschedule("nope", dense)
+    with pytest.raises(TypeError):
+        reschedule(base, "nope")
+
+
+def test_splice_rejects_mismatched_geometry():
+    dense = random_dense(36)
+    cfg = PlanConfig(l=8, layout="ragged", load_balance=False)
+    base = plan(dense, cfg, cache=None)
+    art = base.artifact
+    assert isinstance(art, RaggedSchedule)
+    other = plan(random_dense(37, m=24, n=48), cfg, cache=None)
+    with pytest.raises(ValueError):
+        splice_ragged_blocks(art, other.sched, np.array([0]))

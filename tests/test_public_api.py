@@ -19,7 +19,9 @@ from conftest import SRC
 #: ROADMAP.md (§Plan API + deprecation policy).
 EXPECTED_EXPORTS = sorted([
     # plan/execute API
-    "plan", "GustPlan", "PlanConfig", "PlanCost", "TuneResult",
+    "plan", "reschedule", "GustPlan", "PlanConfig", "PlanCost", "TuneResult",
+    # persistent plan artifacts (PR 7)
+    "PlanStore",
     # formats + scheduler
     "COOMatrix", "GustSchedule", "coo_from_dense", "dense_from_coo",
     "schedule",
