@@ -90,7 +90,7 @@ def bench(fn, iters: int) -> float:
     return best
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--widths", type=int, nargs="+",
                     default=[4096, 65536, 524288])
@@ -115,7 +115,7 @@ def main():
                     "separate output file (never clobbers the committed "
                     "full-run record)")
     ap.add_argument("--out", default=None)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.tiny:
         args.widths = [4096, 16384]
         args.windows = min(args.windows, 8)

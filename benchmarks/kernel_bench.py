@@ -58,7 +58,11 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.plan import PlanConfig, plan
-from gather_bench import bench, synth_local_schedule
+
+try:  # script execution (benchmarks/ on sys.path)
+    from gather_bench import bench, synth_local_schedule
+except ImportError:  # package execution (python -m benchmarks.run)
+    from benchmarks.gather_bench import bench, synth_local_schedule
 
 L = 128
 TILE_ROWS = 8192  # stream-tile height for the pipeline emulation
@@ -288,7 +292,7 @@ def _tune_section(n: int, batch: int, iters: int, rng) -> dict:
     }
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--widths", type=int, nargs="+", default=[16384, 65536])
     ap.add_argument("--batch", type=int, default=8)
@@ -310,7 +314,7 @@ def main():
                     help="CI smoke: small widths, wall-clock gates "
                     "report-only, separate output file")
     ap.add_argument("--out", default=None)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.tiny:
         args.widths = [16384]
         args.batch = min(args.batch, 4)

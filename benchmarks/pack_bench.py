@@ -78,7 +78,7 @@ def bench(fn, iters: int) -> float:
     return best
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--windows", type=int, nargs="+",
                     default=[1_000, 10_000, 30_000])
@@ -92,10 +92,21 @@ def main():
     ap.add_argument("--min-speedup", type=float, default=5.0,
                     help="fail below this speedup at >=10k windows; lower "
                     "it on noisy shared runners (0 = report-only)")
-    ap.add_argument("--out", default=os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_pack.json"))
-    args = ap.parse_args()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: few small windows, wall-clock report-"
+                    "only, separate output file (never clobbers the "
+                    "committed full-run record)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    if args.tiny:
+        args.windows = [1_000, 5_000]
+        args.iters = min(args.iters, 2)
+        args.min_speedup = 0.0
+    if args.out is None:
+        args.out = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_pack_tiny.json" if args.tiny else "BENCH_pack.json",
+        )
 
     results = []
     for w in args.windows:

@@ -70,7 +70,7 @@ def bench(fn, iters: int) -> float:
     return best
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--windows", type=int, default=2000)
     ap.add_argument("--l", type=int, default=16)
@@ -84,10 +84,21 @@ def main():
     ap.add_argument("--min-time-speedup", type=float, default=1.0,
                     help="fail if the ragged XLA path is not at least this "
                     "much faster at skew >= 4; lower to 0 on noisy runners")
-    ap.add_argument("--out", default=os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_ragged.json"))
-    args = ap.parse_args()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: fewer/smaller windows, wall-clock "
+                    "report-only, separate output file (never clobbers "
+                    "the committed full-run record)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    if args.tiny:
+        args.windows = min(args.windows, 400)
+        args.iters = min(args.iters, 2)
+        args.min_time_speedup = 0.0
+    if args.out is None:
+        args.out = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_ragged_tiny.json" if args.tiny else "BENCH_ragged.json",
+        )
 
     results = []
     for skew in args.skews:

@@ -1,9 +1,16 @@
 """Benchmark harness: one module per paper table/figure + the roofline
-report.  ``python -m benchmarks.run [--full] [--only fig7,...]``.
+report + every PR's acceptance-gate family.
+``python -m benchmarks.run [--full] [--only fig7,pack,spgemm,...]``.
 
 Default (quick) mode scales the Table-3 surrogate suite to 4% of the
 published dimensions so the full harness finishes in minutes on one CPU
 core; ``--full`` uses larger surrogates (same structure, same scheduler).
+
+The PR-gate families (``pack``, ``ragged``, ``gather``, ``kernel``,
+``sched``, ``serve``, ``spgemm``) run in their ``--tiny``/quick modes —
+one command reproduces every ``BENCH_*.json`` record (tiny records land
+in the ``BENCH_*_tiny.json`` siblings, never clobbering the committed
+full-run files).
 """
 
 from __future__ import annotations
@@ -17,13 +24,16 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="", help="comma list: fig7,fig8,fig9,"
-                    "table4,bound,roofline")
+                    "table4,bound,roofline,pack,ragged,gather,kernel,sched,"
+                    "serve,spgemm")
     args = ap.parse_args(argv)
     scale = 0.12 if args.full else 0.04
     only = set(args.only.split(",")) if args.only else None
 
     from . import (bound_validation, fig7_designs, fig8_speedup_energy,
-                   fig9_bandwidth, roofline_report, table4_serpens)
+                   fig9_bandwidth, gather_bench, kernel_bench, pack_bench,
+                   ragged_bench, roofline_report, sched_bench, serve_bench,
+                   spgemm_bench, table4_serpens)
 
     jobs = [
         ("fig7", lambda: fig7_designs.run(scale=scale)),
@@ -32,6 +42,14 @@ def main(argv=None) -> int:
         ("table4", lambda: table4_serpens.run(scale=scale)),
         ("bound", lambda: bound_validation.run()),
         ("roofline", lambda: roofline_report.run()),
+        # PR acceptance-gate families, each in its quick/--tiny mode
+        ("pack", lambda: pack_bench.main(["--tiny"])),
+        ("ragged", lambda: ragged_bench.main(["--tiny"])),
+        ("gather", lambda: gather_bench.main(["--tiny"])),
+        ("kernel", lambda: kernel_bench.main(["--tiny"])),
+        ("sched", lambda: sched_bench.main(["--tiny"])),
+        ("serve", lambda: serve_bench.main(["--tiny"])),
+        ("spgemm", lambda: spgemm_bench.main(["--tiny"])),
     ]
     rc = 0
     for name, fn in jobs:

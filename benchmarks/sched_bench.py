@@ -308,7 +308,7 @@ def bench_store(args, store_dir):
     return rec
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--nnz", type=int, default=10_000_000,
                     help="edge count for the coloring section")
@@ -332,7 +332,7 @@ def main():
                     help="CI smoke: ~50k nnz, wall-clock gates off, "
                     "separate output file")
     ap.add_argument("--out", default=None)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.tiny:
         args.nnz = min(args.nnz, 50_000)
         args.inc_nnz = min(args.inc_nnz, 50_000)

@@ -72,7 +72,7 @@ def run_continuous(loop: ServeLoop, prompts, max_new: int):
     return {r: loop.completed[r] for r in rids}, time.perf_counter() - t0
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi_6b")
     ap.add_argument("--batch", type=int, default=4)
@@ -91,7 +91,7 @@ def main():
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_serve.json"))
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.tiny:
         args.requests, args.max_new, args.lengths = 4, 3, [3, 7]
         args.min_speedup = 0.0  # shared CI runners: report, don't gate

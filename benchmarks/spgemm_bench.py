@@ -1,0 +1,178 @@
+"""SpGEMM family: bit-identity, streamed-FLOP reduction, chained plans.
+
+Exercises ``GustPlan.spgemm`` (PR 8) over structure-diverse synthetic
+graphs and records to BENCH_spgemm.json:
+
+  * **bit-identity** (hard gate): on integer-valued f32 inputs — where
+    every summation order produces identical floats — the sparse result
+    must be bitwise equal to the dense ``dense_from_coo(A) @
+    dense_from_coo(B)`` reference on every backend × layout combination
+    (the ROADMAP §SpGEMM invariant);
+  * **streamed-FLOP reduction** (hard gate): ``2·m·k·n`` dense FLOPs vs
+    the schedule's ``2·products`` merge ops, from
+    :meth:`GustPlan.spgemm_cost` — deterministic, must clear
+    ``--min-flop-reduction`` on every matrix;
+  * **chained-plan PageRank** (hard gate): the sparse A·A result
+    round-trips through ``repro.plan()`` and powers a **converging**
+    PageRank (``repro.graph.pagerank`` on the two-hop graph), proving
+    the output COO is a first-class planner input;
+  * cost surface (output-nnz estimate vs actual, scratch bytes, merge
+    ops, condensed-B vs dense-B bytes) and jnp/pallas wall times
+    (report-only — CI runners are noisy; the identity gates stay hard).
+
+Usage:
+    PYTHONPATH=src python benchmarks/spgemm_bench.py
+        [--n 1024] [--density 0.01] [--iters 3] [--tiny]
+        [--min-flop-reduction 5.0] [--out BENCH_spgemm.json]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.formats import COOMatrix, dense_from_coo
+from repro.core.plan import PlanConfig, plan
+from repro.data.matrices import synth_banded, synth_power_law, synth_uniform
+from repro.graph import pagerank
+
+
+def _int_valued(coo: COOMatrix, seed: int) -> COOMatrix:
+    """Same pattern, small-integer f32 values: every product and partial
+    sum is exact, so any merge order is bitwise-identical — the regime
+    the bit-identity gate runs in."""
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(1, 5, coo.nnz).astype(np.float32)
+    return COOMatrix(coo.shape, coo.rows, coo.cols, vals)
+
+
+def bench(fn, iters: int) -> float:
+    fn()  # warmup: jit/kernel compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    # n=512 keeps the full run tractable with the Pallas backend in
+    # interpret mode (CPU); the gates are scale-independent
+    ap.add_argument("--n", type=int, default=512)
+    ap.add_argument("--density", type=float, default=0.01)
+    ap.add_argument("--l", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--min-flop-reduction", type=float, default=5.0,
+                    help="fail if 2mkn / 2*products is below this on any "
+                    "matrix (deterministic; 0 = report-only)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small graphs, separate output file "
+                    "(never clobbers the committed full-run record)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    if args.tiny:
+        args.n = min(args.n, 256)
+        args.iters = 1
+    if args.out is None:
+        args.out = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_spgemm_tiny.json" if args.tiny else "BENCH_spgemm.json",
+        )
+
+    n = args.n
+    matrices = {
+        "power_law": synth_power_law(n, args.density, seed=3),
+        "uniform": synth_uniform(n, args.density, seed=4),
+        "banded": synth_banded(n, int(n * n * args.density), seed=5),
+    }
+    combos = [(lay, be) for lay in ("padded", "ragged")
+              for be in ("jnp", "pallas")]
+    results = []
+    for name, coo in matrices.items():
+        A = _int_valued(coo, seed=7)
+        dense_a = dense_from_coo(A)
+        ref = dense_a @ dense_a
+        cost = None
+        rec = {"matrix": name, "n": n, "nnz": A.nnz, "combos": {}}
+        for layout, backend in combos:
+            p = plan(A, PlanConfig(l=args.l, layout=layout, backend=backend))
+            if cost is None:
+                cost = p.spgemm_cost(A)
+            t = bench(lambda: p.spgemm(A), args.iters)
+            C = p.spgemm(A)
+            bitwise = bool(np.array_equal(dense_from_coo(C), ref))
+            keys = C.rows * np.int64(C.shape[1]) + C.cols
+            canonical = bool(np.all(np.diff(keys) > 0))  # dedup + row-sorted
+            rec["combos"][f"{layout}/{backend}"] = {
+                "bitwise": bitwise,
+                "canonical_coo": canonical,
+                "wall_s": round(t, 5),
+            }
+            if not bitwise or not canonical:
+                print(f"  {name} {layout}/{backend}: "
+                      f"bitwise={bitwise} canonical={canonical}")
+        aa = C  # last combo's result (all combos bitwise-equal when gates pass)
+        rec.update(
+            out_nnz=aa.nnz,
+            out_nnz_estimate=cost.out_nnz_estimate,
+            merge_ops=cost.products,
+            scratch_bytes=cost.scratch_bytes,
+            b_condensed_bytes=cost.b_condensed_bytes,
+            b_dense_bytes=cost.b_dense_bytes,
+            k_max=cost.k_max,
+            spgemm_flops=cost.spgemm_flops,
+            dense_flops=cost.dense_flops,
+            flop_reduction=round(cost.flop_reduction, 2),
+        )
+
+        # chained-plan gate: A·A (original float values) re-plans and
+        # powers a converging PageRank on the two-hop graph
+        p_f = plan(coo, PlanConfig(l=args.l))
+        aa_f = p_f.spgemm(coo)
+        pr = pagerank(aa_f, config=PlanConfig(l=args.l), tol=1e-6)
+        rec["pagerank_converged"] = bool(pr.converged)
+        rec["pagerank_iterations"] = pr.iterations
+        results.append(rec)
+        print(f"{name:10s} nnz {A.nnz:>7} -> A·A nnz {aa.nnz:>8} "
+              f"(est {cost.out_nnz_estimate:>8})  merge ops "
+              f"{cost.products:>9}  {rec['flop_reduction']:8.1f}x fewer "
+              f"FLOPs than dense  pagerank: "
+              f"{'converged' if pr.converged else 'DIVERGED'} "
+              f"in {pr.iterations} iters")
+
+    payload = {"bench": "SpGEMM: color-block outer products over condensed B",
+               "results": results}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print("wrote", args.out)
+
+    bad = [
+        (r["matrix"], combo)
+        for r in results
+        for combo, c in r["combos"].items()
+        if not (c["bitwise"] and c["canonical_coo"])
+    ]
+    if bad:
+        raise SystemExit(
+            f"FAIL: spgemm result not bitwise/canonical vs dense reference "
+            f"on {bad}"
+        )
+    worst = min(r["flop_reduction"] for r in results)
+    if worst < args.min_flop_reduction:
+        raise SystemExit(
+            f"FAIL: streamed-FLOP reduction only {worst}x "
+            f"(< {args.min_flop_reduction}x)"
+        )
+    diverged = [r["matrix"] for r in results if not r["pagerank_converged"]]
+    if diverged:
+        raise SystemExit(
+            f"FAIL: chained plan(A·A) PageRank did not converge on {diverged}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Graph analytics on GUST plans: SpGEMM-powered PageRank, triangle
+counting and GNN feature propagation over the synthetic matrix suite.
+
+The new subsystem in three workloads:
+
+  * ``GustPlan.spgemm`` — sparse×sparse through A's color-block stream
+    (SpArch-style condensed outer products), returning a sparse COO that
+    is itself ``repro.plan()``-ed (chained A·A);
+  * ``repro.graph.pagerank`` — schedule the transition matrix once, run
+    the whole power iteration against that one plan;
+  * ``repro.graph.triangle_count`` / ``feature_propagation`` — A·A
+    masked by A, and ``Â H`` per GNN layer.
+
+    PYTHONPATH=src python examples/graph_analytics.py
+"""
+
+import numpy as np
+
+import repro
+from repro.data.matrices import synth_power_law
+from repro.graph import feature_propagation, pagerank, triangle_count
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 512
+    adj = synth_power_law(n, 0.02, seed=3)
+    cfg = repro.PlanConfig(l=64)
+    print(f"graph: {n} nodes, {adj.nnz} edges (power-law)")
+
+    # 1. the SpGEMM primitive: A·A through the plan's color-block stream,
+    #    bitwise-checked against the dense reference (integer-valued A)
+    pattern = repro.COOMatrix(
+        adj.shape, adj.rows, adj.cols, np.ones(adj.nnz, np.float32)
+    )
+    p = repro.plan(pattern, cfg)
+    cost = p.spgemm_cost(pattern)
+    aa = p.spgemm(pattern)
+    dense_ref = repro.dense_from_coo(pattern) @ repro.dense_from_coo(pattern)
+    print(f"spgemm: A·A nnz={aa.nnz} (estimated {cost.out_nnz_estimate}), "
+          f"{cost.products} merge ops, "
+          f"{cost.flop_reduction:.0f}x fewer FLOPs than dense, "
+          f"bitwise vs dense: {np.array_equal(repro.dense_from_coo(aa), dense_ref)}")
+
+    # 2. chained plans: the sparse product re-plans directly
+    p2 = repro.plan(aa, cfg)
+    v = rng.standard_normal(n).astype(np.float32)
+    y = np.asarray(p2.spmv(v))
+    print(f"chained plan(A·A): {p2} -> spmv max err "
+          f"{np.abs(y - dense_ref @ v).max():.2e}")
+
+    # 3. PageRank: one plan for the transition matrix, many spmv iterations
+    pr = pagerank(adj, config=cfg)
+    print(f"pagerank: converged={pr.converged} in {pr.iterations} iters "
+          f"(residual {pr.residual:.2e}), top nodes: {pr.top(5).tolist()}")
+
+    # 4. triangle census: one spgemm + host-side mask
+    tc = triangle_count(adj, config=cfg)
+    print(f"triangles: {tc.triangles} "
+          f"(clustering coefficient {tc.clustering_coefficient:.4f}, "
+          f"A·A nnz {tc.spgemm_nnz})")
+
+    # 5. GNN feature propagation: Â scheduled once, one spmm per layer
+    feats = rng.standard_normal((n, 16)).astype(np.float32)
+    out = feature_propagation(adj, feats, num_layers=2, config=cfg)
+    print(f"gnn propagation: features {feats.shape} -> {out.shape}, "
+          f"norm ratio {np.linalg.norm(out) / np.linalg.norm(feats):.3f}")
+
+
+if __name__ == "__main__":
+    main()

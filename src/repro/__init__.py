@@ -27,6 +27,14 @@ _EXPORTS = {
     "TuneResult": "repro.core.plan",
     # persistent plan artifacts (cross-process amortization)
     "PlanStore": "repro.core.plan_store",
+    # SpGEMM cost surface (the product itself is GustPlan.spgemm)
+    "SpgemmCost": "repro.core.spgemm",
+    # graph-analytics workloads (PR 8, built on GustPlan.spgemm/spmm)
+    "pagerank": "repro.graph.analytics",
+    "triangle_count": "repro.graph.analytics",
+    "feature_propagation": "repro.graph.analytics",
+    "PageRankResult": "repro.graph.analytics",
+    "TriangleCountResult": "repro.graph.analytics",
     # formats + scheduler
     "COOMatrix": "repro.core.formats",
     "GustSchedule": "repro.core.formats",
@@ -108,6 +116,14 @@ if TYPE_CHECKING:  # static analyzers see the real symbols
         reschedule,
     )
     from repro.core.plan_store import PlanStore  # noqa: F401
+    from repro.core.spgemm import SpgemmCost  # noqa: F401
+    from repro.graph.analytics import (  # noqa: F401
+        PageRankResult,
+        TriangleCountResult,
+        feature_propagation,
+        pagerank,
+        triangle_count,
+    )
     from repro.core.scheduler import schedule  # noqa: F401
     from repro.core.spmv import (  # noqa: F401
         distributed_spmv,

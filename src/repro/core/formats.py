@@ -62,6 +62,22 @@ class COOMatrix:
         order = np.lexsort((self.cols, self.rows))
         return COOMatrix(self.shape, self.rows[order], self.cols[order], self.vals[order])
 
+    def sorted_by_col(self) -> "COOMatrix":
+        """Entries ordered by (col, row) — the column-major twin of
+        :meth:`sorted_by_row` (CSC assembly, transpose chaining)."""
+        order = np.lexsort((self.rows, self.cols))
+        return COOMatrix(self.shape, self.rows[order], self.cols[order], self.vals[order])
+
+    def transpose(self) -> "COOMatrix":
+        """``Aᵀ`` with entries in the transpose's row-major order (so
+        ``t.sorted_by_row()`` is a no-op reorder).  Values are shared,
+        not copied: ``dense_from_coo(coo.transpose()) ==
+        dense_from_coo(coo).T`` including duplicate-entry summation."""
+        srt = self.sorted_by_col()
+        return COOMatrix(
+            (self.shape[1], self.shape[0]), srt.cols, srt.rows, srt.vals
+        )
+
 
 def coo_from_dense(dense: np.ndarray) -> COOMatrix:
     rows, cols = np.nonzero(dense)

@@ -605,6 +605,39 @@ class GustPlan:
             return self._spmv_sharded(v)
         return self.spmm(v[:, None])[:, 0]
 
+    def spgemm(
+        self,
+        other,
+        *,
+        backend: Optional[str] = None,
+        interpret: Optional[bool] = None,
+    ) -> COOMatrix:
+        """Sparse×sparse ``C = A @ B`` through this plan's color-block
+        stream (``other``: COOMatrix, dense array, or another plan built
+        from its source matrix).  Returns a deduplicated row-sorted
+        :class:`COOMatrix` that can itself be ``repro.plan()``-ed —
+        chained ``A·A`` analytics (:mod:`repro.graph`) run on the result
+        directly.  See :mod:`repro.core.spgemm` for the condensed-B
+        outer-product organization and the bit-identity contract
+        (ROADMAP §SpGEMM invariants)."""
+        from .spgemm import spgemm as _spgemm
+
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "spgemm on a sharded plan is not supported; call it on "
+                "the unsharded plan"
+            )
+        return _spgemm(self, other, backend=backend, interpret=interpret)
+
+    def spgemm_cost(self, other) -> "SpgemmCost":
+        """Predicted cost of ``self @ other`` — output-nnz estimate,
+        scratch bytes, merge ops, streamed-FLOP reduction vs dense —
+        without packing or executing (the dryrun/roofline entry point
+        for SpGEMM).  See :class:`repro.core.spgemm.SpgemmCost`."""
+        from .spgemm import spgemm_cost as _spgemm_cost
+
+        return _spgemm_cost(self, other)
+
     # -- distributed execution (absorbs distributed_spmv) --------------------
 
     def shard(self, mesh, axis: Optional[str] = None) -> "GustPlan":

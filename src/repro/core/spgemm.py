@@ -1,0 +1,375 @@
+"""SpGEMM: sparse×sparse through a GUST plan's color-block stream.
+
+The plan/execute machinery of PRs 1-7 schedules ``A`` once into a stream
+of conflict-free ``(c_blk, l)`` multiply blocks.  For SpMV each slot
+``(a = A[i, j], row, col = j)`` gathers one vector element ``x[j]``;
+SpGEMM generalizes the gather target from an element to a **row of B**
+(SpArch's streamed-outer-product organization): slot ``(a, row, j)``
+contributes ``a · B[j, :]`` to output row ``i``, and the per-window
+``(l, B)`` accumulator tile becomes an ``(l, n_out)`` dense-row
+accumulator — bounded scratch, merged window by window, never an
+``(m, n_out)`` intermediate on the accelerator.
+
+B is carried in the *condensed-row* format (:func:`condense_rows`):
+every row padded to ``k_max`` ``(value, column)`` pairs, so the streamed
+B bytes scale with ``nnz(B)`` (``R·k_max·8``) instead of the densified
+``R·n_out·4``.  Two execution paths share the schedule:
+
+  * **jnp** — :func:`repro.kernels.ref.gust_spgemm_ref`, a segment-sum
+    merge over all partial products (the dense-row accumulator realized
+    as one scatter-add);
+  * **pallas** — :func:`repro.kernels.gust_spgemm.make_gust_spgemm`, the
+    scalar-prefetch kernel with a VMEM ``(l, n_out)`` scratch row
+    accumulator (integrate across a window's blocks, dump once).
+
+The result is an explicit sparse :class:`~repro.core.formats.COOMatrix`
+— deduplicated, row-sorted, numerically-zero entries dropped — that can
+itself be ``repro.plan()``-ed, enabling chained ``A·A`` graph analytics
+(:mod:`repro.graph`).
+
+Per the plan-API policy (ROADMAP §PR 3) the public entry point is
+:meth:`GustPlan.spgemm` / :meth:`GustPlan.spgemm_cost`; this module is
+the implementation, not a new front door.  Scheduling of A goes through
+the existing ``ScheduleCache``/``PlanStore`` unchanged — SpGEMM adds no
+artifact knobs (B arrives per call, like the vector in ``spmv``).
+
+Numerical contract (ROADMAP §SpGEMM invariants): on exact-arithmetic
+inputs (integer-valued f32 where every product and partial sum is
+exactly representable) the result is **bitwise equal** to the dense
+``dense_from_coo(A) @ dense_from_coo(B)`` reference on every
+backend × layout combination — any summation order produces the same
+floats, so the gates pin the full index/merge logic exactly.  On
+arbitrary f32 inputs the paths agree to float tolerance (their merge
+orders differ).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import COOMatrix, coo_from_dense
+
+__all__ = [
+    "CondensedB",
+    "condense_rows",
+    "SpgemmCost",
+    "spgemm_cost",
+    "spgemm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CondensedB:
+    """B in condensed-row form: every row padded to ``k_max`` pairs.
+
+    ``vals``/``cols`` are ``(r_rows, k_max)`` planes — f32 values and
+    int32 output-column ids — with rows padded to ``r_rows =
+    ceil(k / l) * l`` so the A stream's padding column slots (which hold
+    their own lane index, < l <= r_rows) always gather in-bounds.
+    Padding entries hold ``value 0.0, column 0``: zero contribution, the
+    packed-format invariant carried over to B."""
+
+    shape: Tuple[int, int]  # original B shape (k, n)
+    vals: jnp.ndarray  # (r_rows, k_max) f32
+    cols: jnp.ndarray  # (r_rows, k_max) int32
+    k_max: int
+    r_rows: int
+
+    @property
+    def condensed_bytes(self) -> int:
+        return int(self.r_rows * self.k_max * (4 + 4))
+
+    @property
+    def dense_bytes(self) -> int:
+        return int(self.r_rows * self.shape[1] * 4)
+
+
+def condense_rows(b: COOMatrix, l: int) -> CondensedB:
+    """Build the condensed-row planes of ``b`` for a length-``l`` plan.
+
+    Duplicate ``(row, col)`` entries are summed (the
+    :func:`~repro.core.formats.dense_from_coo` semantics), rows are
+    sorted and each row's entries are column-sorted — the deterministic
+    layout both backends read."""
+    k, n = b.shape
+    r_rows = max(-(-k // l), 1) * l
+    if b.nnz == 0:
+        return CondensedB(
+            shape=(k, n),
+            vals=jnp.zeros((r_rows, 1), jnp.float32),
+            cols=jnp.zeros((r_rows, 1), jnp.int32),
+            k_max=1,
+            r_rows=r_rows,
+        )
+    srt = b.sorted_by_row()
+    key = srt.rows * np.int64(n) + srt.cols
+    uniq, inv = np.unique(key, return_inverse=True)
+    acc = np.zeros(uniq.shape[0], np.float32)
+    np.add.at(acc, inv, srt.vals.astype(np.float32))
+    rows_u = (uniq // n).astype(np.int64)
+    cols_u = (uniq % n).astype(np.int64)
+    counts = np.bincount(rows_u, minlength=k)
+    k_max = int(max(counts.max(), 1))
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    pos = np.arange(uniq.shape[0], dtype=np.int64) - starts[rows_u]
+    vals = np.zeros((r_rows, k_max), np.float32)
+    cols = np.zeros((r_rows, k_max), np.int32)
+    vals[rows_u, pos] = acc
+    cols[rows_u, pos] = cols_u
+    return CondensedB(
+        shape=(k, n),
+        vals=jnp.asarray(vals),
+        cols=jnp.asarray(cols),
+        k_max=k_max,
+        r_rows=r_rows,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SpgemmCost:
+    """Predicted cost of one ``A @ B`` product — no execution, no pack.
+
+    ``products`` is the multiply/merge-op count (Σ over nnz(A) of B's
+    matching row nnz — every partial product is one merge into the row
+    accumulator); ``out_nnz_estimate`` the balls-in-bins estimate of the
+    result's nnz; ``scratch_bytes`` the ``(l, n_out)`` f32 VMEM row
+    accumulator; ``b_condensed_bytes``/``b_dense_bytes`` the streamed-B
+    footprint of the condensed format vs densifying; ``flop_reduction``
+    the streamed-FLOP win over a dense ``(m, k) @ (k, n)`` matmul.  This
+    is what dryrun/roofline read to show SpGEMM without executing."""
+
+    products: int
+    out_nnz_estimate: int
+    out_density_estimate: float
+    scratch_bytes: int
+    b_condensed_bytes: int
+    b_dense_bytes: int
+    k_max: int
+    streamed_slots: int
+    spgemm_flops: int
+    dense_flops: int
+    flop_reduction: float
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _as_coo(other) -> COOMatrix:
+    from .plan import GustPlan
+
+    if isinstance(other, COOMatrix):
+        return other
+    if isinstance(other, GustPlan):
+        if other._source is None:
+            raise ValueError(
+                "spgemm(other=GustPlan) needs the plan's source matrix; "
+                "this plan was built without one (schedule/spec/store "
+                "path) — pass the COOMatrix directly"
+            )
+        return other._source
+    if isinstance(other, (np.ndarray, jax.Array)):
+        dense = np.asarray(other)
+        if dense.ndim != 2:
+            raise ValueError(
+                f"dense B must be 2-D, got shape {dense.shape}"
+            )
+        return coo_from_dense(dense)
+    raise TypeError(
+        "spgemm() takes a COOMatrix, GustPlan or dense array for B; got "
+        f"{type(other).__name__}"
+    )
+
+
+def _a_cols(plan_a) -> np.ndarray:
+    """Original column index of every real scheduled slot of A."""
+    if plan_a._source is not None:
+        return np.asarray(plan_a._source.cols, np.int64)
+    if plan_a.sched is not None:
+        s = plan_a.sched
+        return np.asarray(s.col_sch, np.int64)[np.asarray(s.valid)]
+    raise ValueError(
+        "spgemm_cost() needs the schedule or source matrix; "
+        "deserialized/spec plans carry only the packed artifact"
+    )
+
+
+def spgemm_cost(plan_a, other) -> SpgemmCost:
+    """Price ``plan_a @ other`` without executing (or packing)."""
+    b = _as_coo(other)
+    m, k = plan_a.shape
+    if b.shape[0] != k:
+        raise ValueError(
+            f"spgemm shape mismatch: A is {m}x{k}, B is "
+            f"{b.shape[0]}x{b.shape[1]}"
+        )
+    n_out = b.shape[1]
+    l = plan_a.l
+    b_row_nnz = b.row_nnz()
+    a_cols = _a_cols(plan_a)
+    products = int(b_row_nnz[a_cols].sum())
+
+    # balls-in-bins output-nnz estimate: row i of C receives
+    # prod_i = Σ_{j in A row i} nnz(B[j, :]) candidate columns out of n
+    if plan_a._source is not None and n_out:
+        src = plan_a._source
+        per_row = np.zeros(m, np.float64)
+        np.add.at(per_row, src.rows, b_row_nnz[src.cols].astype(np.float64))
+        est = float(np.sum(n_out * -np.expm1(per_row * np.log1p(-1.0 / n_out))))
+    elif n_out and m:
+        per_row = products / float(m)
+        est = float(m * n_out * -np.expm1(per_row * np.log1p(-1.0 / n_out)))
+    else:
+        est = 0.0
+    out_nnz = int(min(round(est), m * n_out))
+
+    # streamed A slots at the plan's resolved layout, from the schedule
+    # alone (no pack): padded streams W * C_pad, ragged only real blocks
+    if plan_a.sched is not None:
+        cw = plan_a.sched.colors_per_window
+        cb = plan_a.config.c_blk
+        if plan_a.layout == "ragged":
+            blocks = int(np.maximum(-(-cw // cb), 1).sum())
+        else:
+            blocks = plan_a.sched.num_windows * max(
+                -(-int(cw.max() if cw.size else 1) // cb), 1
+            )
+        streamed_slots = blocks * cb * l
+    else:
+        a = plan_a.artifact
+        streamed_slots = int(np.prod(a.m_blk.shape))
+
+    r_rows = max(-(-k // l), 1) * l
+    k_max = int(max(b_row_nnz.max() if b.nnz else 1, 1))
+    spgemm_flops = 2 * products
+    dense_flops = 2 * m * k * n_out
+    return SpgemmCost(
+        products=products,
+        out_nnz_estimate=out_nnz,
+        out_density_estimate=out_nnz / float(m * n_out) if m and n_out else 0.0,
+        scratch_bytes=l * n_out * 4,
+        b_condensed_bytes=r_rows * k_max * 8,
+        b_dense_bytes=r_rows * n_out * 4,
+        k_max=k_max,
+        streamed_slots=streamed_slots,
+        spgemm_flops=spgemm_flops,
+        dense_flops=dense_flops,
+        flop_reduction=dense_flops / max(spgemm_flops, 1),
+    )
+
+
+def _stream_view(art):
+    """Unified ragged-style view of either packed layout: the flat block
+    stream plus the ``block_window``/``block_starts`` steering pair (a
+    padded artifact is the stream whose every window owns ``C_pad/c_blk``
+    blocks)."""
+    from .packing import RaggedSchedule
+
+    if isinstance(art, RaggedSchedule):
+        bw = jnp.asarray(art.block_window, jnp.int32)
+        bs = jnp.asarray(art.block_starts, jnp.int32)
+        return art.num_blocks, bw, bs
+    cpb = art.c_pad // art.c_blk
+    num_blocks = art.num_windows * cpb
+    bw = jnp.repeat(jnp.arange(art.num_windows, dtype=jnp.int32), cpb)
+    bs = jnp.arange(art.num_windows + 1, dtype=jnp.int32) * cpb
+    return num_blocks, bw, bs
+
+
+_ref_jit = None
+
+
+def _spgemm_ref(m_blk, col_blk, row_blk, window, b_vals, b_cols, *,
+                num_windows, l, n_out):
+    global _ref_jit
+    if _ref_jit is None:
+        from repro.kernels.ref import gust_spgemm_ref
+
+        _ref_jit = jax.jit(
+            gust_spgemm_ref,
+            static_argnames=("num_windows", "l", "n_out"),
+        )
+    return _ref_jit(
+        m_blk, col_blk, row_blk, window, b_vals, b_cols,
+        num_windows=num_windows, l=l, n_out=n_out,
+    )
+
+
+def spgemm(plan_a, other, *, backend: str = None,
+           interpret: bool = None) -> COOMatrix:
+    """``C = A @ B`` over plan A's color-block stream; returns a sparse
+    deduplicated row-sorted :class:`COOMatrix` (numerically-zero entries
+    dropped) that can itself be ``repro.plan()``-ed.
+
+    ``backend`` overrides the plan's resolution (``"jnp"`` |
+    ``"pallas"``); the SpGEMM kernel's one-hot row gather does not need
+    the lane-``fusable`` structure SpMV's fused gather does, so
+    ``backend="auto"`` resolves to Pallas on TPU unconditionally.
+    Quantized (int8) plans are rejected — the SpGEMM contract is pinned
+    for float streams; re-pack A at f32/bf16."""
+    from repro.kernels.ops import normalize_choice
+
+    b_coo = _as_coo(other)
+    m, k = plan_a.shape
+    if b_coo.shape[0] != k:
+        raise ValueError(
+            f"spgemm shape mismatch: A is {m}x{k}, B is "
+            f"{b_coo.shape[0]}x{b_coo.shape[1]}"
+        )
+    n_out = b_coo.shape[1]
+    art = plan_a.artifact
+    if art.quantized:
+        raise ValueError(
+            "spgemm on an int8-quantized plan is not supported: the "
+            "SpGEMM bit-identity contract is pinned for float value "
+            "streams (re-pack A with value_dtype='float32')"
+        )
+    if backend is None:
+        backend = plan_a.config.backend
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    normalize_choice("backend", backend)
+    if interpret is None:
+        interpret = plan_a._interpret()
+
+    l, W, c_blk = art.l, art.num_windows, art.c_blk
+    cond = condense_rows(b_coo, l)
+    num_blocks, bw, bs = _stream_view(art)
+    if backend == "pallas":
+        from repro.kernels.gust_spgemm import make_gust_spgemm
+
+        fn = make_gust_spgemm(
+            num_blocks, W, l, cond.r_rows, cond.k_max, n_out,
+            c_blk=c_blk, interpret=interpret,
+        )
+        y_win = fn(
+            bw, bs,
+            jnp.asarray(art.m_blk), jnp.asarray(art.col_blk),
+            jnp.asarray(art.row_blk), cond.vals, cond.cols,
+        )
+    else:
+        window = jnp.repeat(bw, c_blk)
+        y_win = _spgemm_ref(
+            jnp.asarray(art.m_blk), jnp.asarray(art.col_blk),
+            jnp.asarray(art.row_blk), window, cond.vals, cond.cols,
+            num_windows=W, l=l, n_out=n_out,
+        )
+
+    y_sorted = np.asarray(y_win, np.float32).reshape(W * l, n_out)
+    if art.identity_perm:
+        c_dense = y_sorted[:m]
+    else:
+        out = np.zeros((max(m, W * l), n_out), np.float32)
+        out[np.asarray(art.row_perm)] = y_sorted
+        c_dense = out[:m]
+    rows, cols = np.nonzero(c_dense)
+    return COOMatrix(
+        (m, n_out),
+        rows.astype(np.int64),
+        cols.astype(np.int64),
+        c_dense[rows, cols],
+    )

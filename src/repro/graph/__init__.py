@@ -1,0 +1,23 @@
+"""Graph-analytics workloads on GUST plans (PR 8).
+
+The SpGEMM subsystem's consumer family: PageRank (plan-amortized SpMV
+power iteration), triangle counting (``A·A`` masked by ``A``) and GNN
+feature propagation (normalized-adjacency ``spmm``), each running every
+sparse product through :class:`~repro.core.plan.GustPlan`.
+"""
+
+from .analytics import (
+    PageRankResult,
+    TriangleCountResult,
+    feature_propagation,
+    pagerank,
+    triangle_count,
+)
+
+__all__ = [
+    "PageRankResult",
+    "TriangleCountResult",
+    "pagerank",
+    "triangle_count",
+    "feature_propagation",
+]

@@ -26,6 +26,7 @@ __all__ = [
     "gather_fill_ref",
     "gather_fill_local_ref",
     "dequant_ref",
+    "gust_spgemm_ref",
 ]
 
 
@@ -77,6 +78,46 @@ def gather_fill_local_ref(
     rows = col_loc.shape[0]
     blk = jnp.arange(rows, dtype=jnp.int32) // c_blk
     return tiles[blk[:, None], col_loc.astype(jnp.int32), :]  # (rows, l, B)
+
+
+def gust_spgemm_ref(
+    m_blocks: jnp.ndarray,  # (T*c_blk, l) A values (0 in padding)
+    col_blocks: jnp.ndarray,  # (T*c_blk, l) int32 ORIGINAL A columns (B row ids)
+    row_blocks: jnp.ndarray,  # (T*c_blk, l) int32 adder index
+    window: jnp.ndarray,  # (T*c_blk,) int32 window id of each stream row
+    b_vals: jnp.ndarray,  # (R, k_max) condensed B row values (0 in padding)
+    b_cols: jnp.ndarray,  # (R, k_max) int32 condensed B row columns (0 in padding)
+    *,
+    num_windows: int,
+    l: int,
+    n_out: int,
+) -> jnp.ndarray:
+    """Oracle for the SpGEMM kernel: sparse×sparse through A's color-block
+    stream as an outer-product schedule over B's condensed rows.
+
+    Each scheduled slot ``(a = A[i, j], row, col=j)`` gathers B's condensed
+    row ``j`` — its ``k_max`` padded ``(value, column)`` pairs — multiplies
+    the values by ``a``, and merges every partial product into the dense
+    per-window row accumulator at ``(window*l + row, b_col)``.  Padding A
+    slots carry ``a == 0`` and padding B entries carry ``value == 0``, so
+    both contribute exactly zero (the packed-format zero-contribution
+    invariant extends to the product).  Returns ``(W, l, n_out)`` f32 —
+    the same per-window accumulator shape as the SpMV oracles with the
+    vector batch replaced by B's output columns."""
+    col = col_blocks.astype(jnp.int32)
+    bv = jnp.take(b_vals.astype(jnp.float32), col, axis=0)  # (T, l, k_max)
+    bc = jnp.take(b_cols.astype(jnp.int32), col, axis=0)  # (T, l, k_max)
+    partial = m_blocks.astype(jnp.float32)[:, :, None] * bv  # (T, l, k_max)
+    adder = window.astype(jnp.int32)[:, None] * l + row_blocks.astype(
+        jnp.int32
+    )  # (T, l)
+    idx = adder[:, :, None] * n_out + bc  # (T, l, k_max)
+    y = jax.ops.segment_sum(
+        partial.reshape(-1),
+        idx.reshape(-1),
+        num_segments=num_windows * l * n_out,
+    )
+    return y.reshape(num_windows, l, n_out)
 
 
 def _window_accumulate(

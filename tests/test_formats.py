@@ -1,0 +1,127 @@
+"""Direct coverage of the ``core/formats.py`` conversion helpers (PR 8).
+
+The SpGEMM output path leans on ``dense_from_coo``/``csr_from_coo``
+round-trips, duplicate-entry summation and the new
+``transpose``/``sorted_by_col`` methods; this module pins them against
+plain-numpy references including the empty-row/col and duplicate edge
+cases.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.formats import (
+    COOMatrix,
+    coo_from_dense,
+    csr_from_coo,
+    dense_from_coo,
+)
+
+
+def random_coo(m, n, density, seed, duplicates=0):
+    rng = np.random.default_rng(seed)
+    dense = ((rng.random((m, n)) < density) * rng.standard_normal((m, n)))
+    coo = coo_from_dense(dense.astype(np.float32))
+    if duplicates and coo.nnz:
+        pick = rng.choice(coo.nnz, min(duplicates, coo.nnz), replace=False)
+        coo = COOMatrix(
+            coo.shape,
+            np.concatenate([coo.rows, coo.rows[pick]]),
+            np.concatenate([coo.cols, coo.cols[pick]]),
+            np.concatenate([coo.vals, coo.vals[pick]]),
+        )
+    return coo
+
+
+@pytest.mark.parametrize("m,n,density", [(1, 1, 1.0), (7, 5, 0.3),
+                                         (16, 33, 0.1), (40, 8, 0.5)])
+def test_dense_coo_round_trip(m, n, density):
+    rng = np.random.default_rng(0)
+    dense = ((rng.random((m, n)) < density) * rng.standard_normal((m, n))
+             ).astype(np.float32)
+    assert np.array_equal(dense_from_coo(coo_from_dense(dense)), dense)
+
+
+def test_dense_from_coo_sums_duplicates():
+    coo = COOMatrix(
+        (3, 3),
+        np.array([0, 0, 2, 2, 2], np.int64),
+        np.array([1, 1, 0, 0, 0], np.int64),
+        np.array([1.5, 2.5, 1.0, 1.0, -3.0], np.float32),
+    )
+    dense = dense_from_coo(coo)
+    assert dense[0, 1] == np.float32(1.5) + np.float32(2.5)
+    assert dense[2, 0] == np.float32(-1.0)
+    assert dense.sum() == dense[0, 1] + dense[2, 0]
+
+
+def test_empty_matrix_and_empty_rows_cols():
+    empty = COOMatrix((4, 6), np.zeros(0, np.int64), np.zeros(0, np.int64),
+                      np.zeros(0, np.float32))
+    assert empty.nnz == 0 and empty.density == 0.0
+    assert np.array_equal(dense_from_coo(empty), np.zeros((4, 6), np.float32))
+    indptr, indices, data = csr_from_coo(empty)
+    assert np.array_equal(indptr, np.zeros(5, np.int64))
+    assert indices.size == 0 and data.size == 0
+
+    # rows 1 and 3, cols 0 and 2 entirely empty
+    coo = COOMatrix((4, 3), np.array([0, 2], np.int64),
+                    np.array([1, 1], np.int64),
+                    np.array([2.0, 3.0], np.float32))
+    assert np.array_equal(coo.row_nnz(), [1, 0, 1, 0])
+    assert np.array_equal(coo.col_nnz(), [0, 2, 0])
+    indptr, _, _ = csr_from_coo(coo)
+    assert np.array_equal(indptr, [0, 1, 1, 2, 2])
+
+
+@pytest.mark.parametrize("dup", [0, 5])
+def test_csr_from_coo_matches_dense(dup):
+    coo = random_coo(17, 11, 0.3, seed=1, duplicates=dup)
+    indptr, indices, data = csr_from_coo(coo)
+    assert indptr[0] == 0 and indptr[-1] == coo.nnz
+    dense = np.zeros(coo.shape, np.float32)
+    for i in range(coo.shape[0]):
+        for k in range(indptr[i], indptr[i + 1]):
+            dense[i, indices[k]] += data[k]
+        # within-row column order is sorted (the sorted_by_row contract)
+        row_cols = indices[indptr[i]:indptr[i + 1]]
+        assert np.all(np.diff(row_cols) >= 0)
+    assert np.allclose(dense, dense_from_coo(coo), atol=1e-6)
+
+
+def test_sorted_by_col_order_and_content():
+    coo = random_coo(13, 9, 0.4, seed=2, duplicates=3)
+    s = coo.sorted_by_col()
+    keys = s.cols * coo.shape[0] + s.rows
+    assert np.all(np.diff(keys) >= 0)  # (col, row) lexicographic
+    assert np.array_equal(dense_from_coo(s), dense_from_coo(coo))
+
+
+@pytest.mark.parametrize("m,n,density,dup", [(6, 6, 0.4, 0), (12, 5, 0.3, 4),
+                                             (3, 20, 0.2, 0)])
+def test_transpose_round_trip(m, n, density, dup):
+    coo = random_coo(m, n, density, seed=3, duplicates=dup)
+    t = coo.transpose()
+    assert t.shape == (n, m)
+    assert np.array_equal(dense_from_coo(t), dense_from_coo(coo).T)
+    # transpose emits the transpose's row-major order
+    keys = t.rows * np.int64(m) + t.cols
+    assert np.all(np.diff(keys) >= 0)
+    # double transpose restores the matrix (as a dense equality)
+    assert np.array_equal(dense_from_coo(t.transpose()), dense_from_coo(coo))
+
+
+def test_transpose_empty():
+    empty = COOMatrix((2, 5), np.zeros(0, np.int64), np.zeros(0, np.int64),
+                      np.zeros(0, np.float32))
+    t = empty.transpose()
+    assert t.shape == (5, 2) and t.nnz == 0
+
+
+def test_shape_validation():
+    with pytest.raises(ValueError):
+        COOMatrix((2, 2), np.array([2], np.int64), np.array([0], np.int64),
+                  np.array([1.0], np.float32))
+    with pytest.raises(ValueError):
+        COOMatrix((2, 2), np.array([0, 1], np.int64), np.array([0], np.int64),
+                  np.array([1.0], np.float32))

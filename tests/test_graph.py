@@ -1,0 +1,151 @@
+"""Graph-analytics workloads (PR 8): PageRank, triangle counting, GNN
+feature propagation — each validated against a plain-numpy dense
+reference on small graphs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.formats import COOMatrix, coo_from_dense
+from repro.core.plan import PlanConfig
+from repro.data.matrices import synth_power_law
+from repro.graph import feature_propagation, pagerank, triangle_count
+
+CFG = PlanConfig(l=8)
+
+
+def ring(n):
+    """Directed ring: node i -> i+1 (every node has in/out degree 1)."""
+    rows = np.arange(n, dtype=np.int64)
+    cols = (rows + 1) % n
+    return COOMatrix((n, n), rows, cols, np.ones(n, np.float32))
+
+
+def dense_pagerank(adj, damping=0.85, iters=500):
+    A = (adj != 0).astype(np.float64)
+    n = A.shape[0]
+    deg = A.sum(1)
+    P = np.zeros((n, n))
+    nz = deg > 0
+    P[nz] = A[nz] / deg[nz, None]
+    r = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        dangling = r[~nz].sum() / n
+        r = damping * (P.T @ r + dangling) + (1 - damping) / n
+        r /= r.sum()
+    return r
+
+
+def test_pagerank_uniform_on_ring():
+    pr = pagerank(ring(12), config=CFG)
+    assert pr.converged
+    np.testing.assert_allclose(pr.scores, np.full(12, 1 / 12), atol=1e-6)
+    assert abs(pr.scores.sum() - 1.0) < 1e-6
+
+
+def test_pagerank_matches_dense_reference():
+    rng = np.random.default_rng(0)
+    dense = (rng.random((24, 24)) < 0.15).astype(np.float32)
+    pr = pagerank(dense, config=CFG, tol=1e-10, max_iter=500)
+    np.testing.assert_allclose(pr.scores, dense_pagerank(dense), atol=1e-4)
+    assert abs(pr.scores.sum() - 1.0) < 1e-5
+    assert pr.top(3).shape == (3,)
+
+
+def test_pagerank_dangling_nodes():
+    # node 2 has no out-edges: its mass redistributes, sum stays 1
+    adj = np.zeros((4, 4), np.float32)
+    adj[0, 1] = adj[1, 2] = adj[3, 0] = 1.0
+    pr = pagerank(adj, config=CFG)
+    assert pr.converged
+    np.testing.assert_allclose(pr.scores, dense_pagerank(adj), atol=1e-5)
+
+
+def test_triangle_count_known_graphs():
+    # K4 has C(4,3) = 4 triangles, every vertex in 3 of them
+    k4 = np.ones((4, 4), np.float32) - np.eye(4, dtype=np.float32)
+    tc = triangle_count(k4, config=CFG)
+    assert tc.triangles == 4
+    assert np.array_equal(tc.per_node, [3, 3, 3, 3])
+    assert tc.clustering_coefficient == pytest.approx(1.0)
+
+    # a ring has no triangles (and exercises symmetrization of the
+    # directed pattern)
+    assert triangle_count(ring(8), config=CFG).triangles == 0
+
+    # triangle + pendant edge: exactly one triangle through nodes 0,1,2
+    adj = np.zeros((4, 4), np.float32)
+    for i, j in [(0, 1), (1, 2), (2, 0), (2, 3)]:
+        adj[i, j] = adj[j, i] = 1.0
+    tc = triangle_count(adj, config=CFG)
+    assert tc.triangles == 1
+    assert np.array_equal(tc.per_node, [1, 1, 1, 0])
+
+
+def test_triangle_count_matches_trace_reference():
+    rng = np.random.default_rng(1)
+    dense = (rng.random((20, 20)) < 0.25).astype(np.float32)
+    tc = triangle_count(dense, config=CFG)
+    # reference: trace(S^3)/6 on the symmetrized simple graph
+    S = np.maximum(dense, dense.T)
+    np.fill_diagonal(S, 0)
+    expected = int(round(np.trace(S @ S @ S) / 6))
+    assert tc.triangles == expected
+    assert int(tc.per_node.sum()) == 3 * expected
+    # self-loops and edge weights must not change the census
+    weighted = dense * 7.0 + np.eye(20, dtype=np.float32)
+    assert triangle_count(weighted, config=CFG).triangles == expected
+
+
+def test_feature_propagation_matches_dense_reference():
+    rng = np.random.default_rng(2)
+    dense = (rng.random((16, 16)) < 0.2).astype(np.float32)
+    feats = rng.standard_normal((16, 5)).astype(np.float32)
+    out = feature_propagation(dense, feats, num_layers=2, config=CFG)
+    # dense reference: A_hat = D^-1/2 (S + I) D^-1/2 over the symmetric
+    # simple pattern, applied twice
+    S = np.maximum(dense, dense.T).astype(np.float64)
+    np.fill_diagonal(S, 0)
+    S += np.eye(16)
+    d = S.sum(1)
+    a_hat = S / np.sqrt(np.outer(d, d))
+    ref = a_hat @ (a_hat @ feats.astype(np.float64))
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+    assert out.shape == feats.shape and out.dtype == np.float32
+
+
+def test_feature_propagation_isolated_nodes_and_validation():
+    adj = np.zeros((6, 6), np.float32)
+    adj[0, 1] = 1.0
+    feats = np.eye(6, dtype=np.float32)
+    out = feature_propagation(adj, feats, num_layers=1)
+    # isolated vertices keep their features through the self-loop
+    np.testing.assert_allclose(out[2:], feats[2:], atol=1e-6)
+    assert np.array_equal(
+        feature_propagation(adj, feats, num_layers=0), feats
+    )
+    with pytest.raises(ValueError, match="features"):
+        feature_propagation(adj, np.zeros((3, 2), np.float32))
+    with pytest.raises(ValueError, match="square"):
+        pagerank(np.zeros((2, 3), np.float32))
+
+
+def test_workloads_on_synth_suite():
+    adj = synth_power_law(48, 0.06, seed=9)
+    pr = pagerank(adj, config=CFG)
+    assert pr.converged and abs(pr.scores.sum() - 1.0) < 1e-5
+    tc = triangle_count(adj, config=CFG)
+    S = np.maximum(
+        (np.abs(np.asarray(coo_dense(adj))) > 0).astype(np.float64),
+        (np.abs(np.asarray(coo_dense(adj))) > 0).astype(np.float64).T,
+    )
+    np.fill_diagonal(S, 0)
+    assert tc.triangles == int(round(np.trace(S @ S @ S) / 6))
+    feats = np.random.default_rng(3).standard_normal((48, 4)).astype(np.float32)
+    assert feature_propagation(adj, feats, config=CFG).shape == (48, 4)
+
+
+def coo_dense(coo: COOMatrix) -> np.ndarray:
+    from repro.core.formats import dense_from_coo
+
+    return dense_from_coo(coo)

@@ -22,6 +22,9 @@ EXPECTED_EXPORTS = sorted([
     "plan", "reschedule", "GustPlan", "PlanConfig", "PlanCost", "TuneResult",
     # persistent plan artifacts (PR 7)
     "PlanStore",
+    # SpGEMM + graph analytics (PR 8)
+    "SpgemmCost", "pagerank", "triangle_count", "feature_propagation",
+    "PageRankResult", "TriangleCountResult",
     # formats + scheduler
     "COOMatrix", "GustSchedule", "coo_from_dense", "dense_from_coo",
     "schedule",

@@ -1,0 +1,191 @@
+"""SpGEMM property suite (PR 8): random A·B over every synth generator ×
+both layouts × both backends, **bitwise** vs the dense
+``dense_from_coo(A) @ dense_from_coo(B)`` reference, plus chained
+``plan(A·A)`` re-planability.
+
+The bit-identity regime is exact arithmetic: small-integer-valued f32
+inputs make every product and partial sum exactly representable, so any
+summation order produces identical floats and all backend/layout
+combinations must equal the dense reference bit-for-bit (the ROADMAP
+§SpGEMM invariant).  Arbitrary-float inputs are checked to tolerance
+(merge orders differ across paths).
+
+The deterministic sweep below always runs (hypothesis is optional in
+this container, matching the existing property-suite pattern); the
+hypothesis half widens the same property over random geometry when the
+library is present.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.formats import COOMatrix, coo_from_dense, dense_from_coo
+from repro.core.plan import PlanConfig, plan
+from repro.data.matrices import (
+    synth_banded,
+    synth_block_diagonal,
+    synth_k_regular,
+    synth_power_law,
+    synth_uniform,
+)
+
+GENERATORS = {
+    "uniform": lambda n, seed: synth_uniform(n, 0.08, seed=seed),
+    "power_law": lambda n, seed: synth_power_law(n, 0.08, seed=seed),
+    "k_regular": lambda n, seed: synth_k_regular(n, 0.08, seed=seed),
+    "banded": lambda n, seed: synth_banded(n, int(n * n * 0.08), seed=seed),
+    "block": lambda n, seed: synth_block_diagonal(
+        n, int(n * n * 0.08), num_blocks=4, seed=seed),
+}
+COMBOS = [(lay, be) for lay in ("padded", "ragged") for be in ("jnp", "pallas")]
+
+
+def int_valued(coo: COOMatrix, seed: int) -> COOMatrix:
+    """Same pattern, small-integer f32 values (exact arithmetic)."""
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(-4, 5, coo.nnz).astype(np.float32)
+    vals[vals == 0] = 1.0
+    return COOMatrix(coo.shape, coo.rows, coo.cols, vals)
+
+
+def check_bitwise(A: COOMatrix, B: COOMatrix, l: int):
+    ref = dense_from_coo(A) @ dense_from_coo(B)
+    for layout, backend in COMBOS:
+        p = plan(A, PlanConfig(l=l, layout=layout, backend=backend))
+        C = p.spgemm(B)
+        assert np.array_equal(dense_from_coo(C), ref), (layout, backend)
+        # canonical output: deduplicated, row-sorted, no explicit zeros
+        keys = C.rows * np.int64(C.shape[1]) + C.cols
+        assert np.all(np.diff(keys) > 0)
+        assert np.all(C.vals != 0)
+
+
+@pytest.mark.parametrize("gen", sorted(GENERATORS))
+def test_spgemm_bitwise_all_generators(gen):
+    A = int_valued(GENERATORS[gen](24, seed=5), seed=6)
+    B = int_valued(GENERATORS[gen](24, seed=7), seed=8)
+    check_bitwise(A, B, l=8)
+
+
+def test_spgemm_rectangular():
+    rng = np.random.default_rng(0)
+    da = (rng.random((19, 13)) < 0.25) * rng.integers(1, 4, (19, 13))
+    db = (rng.random((13, 31)) < 0.25) * rng.integers(1, 4, (13, 31))
+    check_bitwise(coo_from_dense(da.astype(np.float32)),
+                  coo_from_dense(db.astype(np.float32)), l=4)
+
+
+def test_spgemm_float_values_allclose():
+    rng = np.random.default_rng(1)
+    da = ((rng.random((20, 20)) < 0.2) * rng.standard_normal((20, 20))
+          ).astype(np.float32)
+    db = ((rng.random((20, 20)) < 0.2) * rng.standard_normal((20, 20))
+          ).astype(np.float32)
+    ref = da @ db
+    for layout, backend in COMBOS:
+        p = plan(da, PlanConfig(l=8, layout=layout, backend=backend))
+        C = p.spgemm(coo_from_dense(db))
+        np.testing.assert_allclose(dense_from_coo(C), ref, atol=1e-5)
+
+
+def test_spgemm_chained_replan():
+    A = int_valued(synth_power_law(24, 0.1, seed=2), seed=3)
+    ref2 = dense_from_coo(A) @ dense_from_coo(A)
+    p = plan(A, PlanConfig(l=8))
+    AA = p.spgemm(p)  # plan accepted as the B operand
+    assert np.array_equal(dense_from_coo(AA), ref2)
+    # the sparse result is a first-class planner input: plan and execute
+    p2 = plan(AA, PlanConfig(l=8))
+    v = np.arange(24, dtype=np.float32) % 5 - 2
+    assert np.array_equal(np.asarray(p2.spmv(v)), ref2 @ v)
+    # and chains again: (A·A)·A bitwise vs dense
+    AAA = p2.spgemm(A)
+    assert np.array_equal(dense_from_coo(AAA), ref2 @ dense_from_coo(A))
+
+
+def test_spgemm_empty_and_empty_rows():
+    A = int_valued(synth_uniform(16, 0.1, seed=4), seed=5)
+    empty_b = COOMatrix((16, 9), np.zeros(0, np.int64), np.zeros(0, np.int64),
+                        np.zeros(0, np.float32))
+    C = plan(A, PlanConfig(l=8)).spgemm(empty_b)
+    assert C.shape == (16, 9) and C.nnz == 0
+    # B with many empty rows (only row 3 populated)
+    b = COOMatrix((16, 6), np.array([3, 3], np.int64),
+                  np.array([0, 5], np.int64), np.array([2.0, 3.0], np.float32))
+    check_bitwise(A, b, l=8)
+
+
+def test_spgemm_validation():
+    A = int_valued(synth_uniform(16, 0.1, seed=6), seed=7)
+    p = plan(A, PlanConfig(l=8))
+    with pytest.raises(ValueError, match="shape mismatch"):
+        p.spgemm(COOMatrix((9, 9), np.zeros(0, np.int64),
+                           np.zeros(0, np.int64), np.zeros(0, np.float32)))
+    with pytest.raises(TypeError):
+        p.spgemm("not a matrix")
+    p8 = plan(A, PlanConfig(l=8, value_dtype="int8"))
+    with pytest.raises(ValueError, match="quantized"):
+        p8.spgemm(A)
+
+
+def test_spgemm_cost_surface():
+    A = int_valued(synth_uniform(32, 0.1, seed=8), seed=9)
+    p = plan(A, PlanConfig(l=8))
+    cost = p.spgemm_cost(A)
+    b_row_nnz = A.row_nnz()
+    assert cost.products == int(b_row_nnz[A.cols].sum())
+    assert cost.spgemm_flops == 2 * cost.products
+    assert cost.dense_flops == 2 * 32 * 32 * 32
+    assert cost.scratch_bytes == 8 * 32 * 4  # (l, n_out) f32
+    assert cost.k_max == int(b_row_nnz.max())
+    C = p.spgemm(A)
+    # the balls-in-bins estimate brackets the actual output nnz loosely
+    assert 0 < cost.out_nnz_estimate <= 32 * 32
+    assert cost.out_nnz_estimate >= C.nnz // 4
+    # scheduling stayed content-keyed: spgemm added no cache identity
+    d = cost.to_dict()
+    assert {"products", "out_nnz_estimate", "scratch_bytes",
+            "b_condensed_bytes", "flop_reduction"} <= set(d)
+
+
+def test_spgemm_does_not_disturb_schedule_cache():
+    from repro.core.packing import default_cache
+
+    A = int_valued(synth_uniform(20, 0.1, seed=10), seed=11)
+    p = plan(A, PlanConfig(l=8))
+    p.artifact  # materialize the lazy pack (plan A's own cache entry)
+    before = default_cache.stats()["entries"]
+    p.spgemm(A)
+    p.spgemm_cost(A)
+    # SpGEMM reuses plan A's schedule; it neither schedules B nor adds
+    # plan-cache entries of its own
+    assert default_cache.stats()["entries"] == before
+
+
+# -- hypothesis half (optional, widens the same property) -------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.integers(2, 28),
+        k=st.integers(2, 24),
+        n=st.integers(2, 28),
+        density=st.sampled_from([0.1, 0.3]),
+        l=st.sampled_from([4, 8]),
+        seed=st.integers(0, 10_000),
+    )
+    def test_spgemm_bitwise_property(m, k, n, density, l, seed):
+        rng = np.random.default_rng(seed)
+        da = (rng.random((m, k)) < density) * rng.integers(1, 5, (m, k))
+        db = (rng.random((k, n)) < density) * rng.integers(1, 5, (k, n))
+        check_bitwise(coo_from_dense(da.astype(np.float32)),
+                      coo_from_dense(db.astype(np.float32)), l=l)
