@@ -96,6 +96,17 @@ def main():
     print(f"pagerank: converged={pr.converged} in {pr.iterations} iters, "
           f"top-3 nodes {pr.top(3).tolist()}")
 
+    # 9. static verification: every packed-format contract (ROADMAP
+    #    GUST-Pxx rules) checked over the plan's leaves — pure numpy,
+    #    no kernel runs.  The same checks run over a PlanStore directory
+    #    as `python -m repro.analysis verify <dir>` (plus `lint` and
+    #    `audit` for the source-policy and kernel-resource rules), and
+    #    PlanStore(dir, verify="load") re-packs instead of serving any
+    #    artifact that fails them.
+    findings = p.verify()
+    print(f"\nverify: {len(findings)} finding(s) "
+          f"({'clean' if not findings else findings[0].rule})")
+
 
 if __name__ == "__main__":
     main()

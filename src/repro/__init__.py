@@ -27,6 +27,9 @@ _EXPORTS = {
     "TuneResult": "repro.core.plan",
     # persistent plan artifacts (cross-process amortization)
     "PlanStore": "repro.core.plan_store",
+    # static artifact verifier (PR 9; pure numpy — see repro.analysis)
+    "verify": "repro.analysis.verify",
+    "Finding": "repro.analysis.verify",
     # SpGEMM cost surface (the product itself is GustPlan.spgemm)
     "SpgemmCost": "repro.core.spgemm",
     # graph-analytics workloads (PR 8, built on GustPlan.spgemm/spmm)
@@ -115,6 +118,7 @@ if TYPE_CHECKING:  # static analyzers see the real symbols
         plan,
         reschedule,
     )
+    from repro.analysis.verify import Finding, verify  # noqa: F401
     from repro.core.plan_store import PlanStore  # noqa: F401
     from repro.core.spgemm import SpgemmCost  # noqa: F401
     from repro.graph.analytics import (  # noqa: F401

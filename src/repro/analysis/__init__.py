@@ -1,0 +1,74 @@
+"""repro.analysis — static verification of GUST artifacts and policies.
+
+Three independent legs, none of which execute a kernel:
+
+* :mod:`repro.analysis.verify` — the artifact verifier.  Every
+  machine-checkable packed-format contract from ROADMAP.md (padding
+  canonicalization, ragged block metadata, gather tables, scale leaves,
+  collision-freedom, index dtypes, canonical COO) as an executable rule
+  with a ``GUST-Pxx`` id.  Entry points: :func:`verify` /
+  :class:`Finding`, plus ``GustPlan.verify()`` and the ``PlanStore``
+  verify-on-load mode.
+* :mod:`repro.analysis.lint` — the policy linter.  An AST pass over
+  ``src/`` enforcing the repo's written rules (``GUST-Lxx``): lazy
+  no-jax top-level package, no new public free functions outside
+  ``GustPlan``, single-decision-point ``resolve_*`` call sites, no new
+  deprecated-shim call sites, no ``np.savez`` on artifact paths, no
+  execution knobs in cache keys.  Grandfathered sites live in
+  ``lint_allowlist.txt`` (format documented there and in
+  :mod:`repro.analysis.lint`).
+* :mod:`repro.analysis.kernel_audit` — the kernel resource/race audit
+  (``GUST-Kxx``): per-builder VMEM footprint vs the 16MB budget,
+  DB ping/pong semaphore pairing, and grid-index bounds — all from the
+  kernel sources' AST, no jax import and no kernel execution.
+
+Like the top-level package, imports resolve lazily (PEP 562): importing
+``repro.analysis`` pulls no jax and no kernel modules — the verifier
+itself runs on plain numpy leaves.
+
+CLI::
+
+    python -m repro.analysis verify <store-dir>   # artifact store scan
+    python -m repro.analysis lint   [src-dir]     # policy lint
+    python -m repro.analysis audit                # kernel resource audit
+"""
+
+from typing import TYPE_CHECKING
+
+_EXPORTS = {
+    "Finding": "repro.analysis.verify",
+    "verify": "repro.analysis.verify",
+    "verify_artifact": "repro.analysis.verify",
+    "lint_sources": "repro.analysis.lint",
+    "audit_kernels": "repro.analysis.kernel_audit",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module_name = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro.analysis' has no attribute {name!r}"
+        ) from None
+    import importlib
+
+    value = getattr(importlib.import_module(module_name), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))
+
+
+if TYPE_CHECKING:  # static analyzers see the real symbols
+    from repro.analysis.kernel_audit import audit_kernels  # noqa: F401
+    from repro.analysis.lint import lint_sources  # noqa: F401
+    from repro.analysis.verify import (  # noqa: F401
+        Finding,
+        verify,
+        verify_artifact,
+    )

@@ -1,0 +1,100 @@
+"""CLI for the static analysis legs (all jax-free)::
+
+    python -m repro.analysis verify <store-dir>   # verify every artifact
+    python -m repro.analysis lint   [src-dir]     # policy lint over src/
+    python -m repro.analysis audit                # kernel resource audit
+
+Exit status is nonzero when any check fails — all three run as
+hard-failing CI steps.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _cmd_verify(args: argparse.Namespace) -> int:
+    # Local imports: the store parser pulls numpy only, never jax.
+    from repro.core.plan_store import PlanStore
+    from repro.analysis.verify import verify
+
+    store = PlanStore(args.store_dir)
+    keys = store.keys()
+    if not keys:
+        print(f"no artifacts under {args.store_dir}")
+        return 0
+    bad = 0
+    for key in keys:
+        record = store.get(key)
+        if record is None:
+            bad += 1
+            print(f"{key}: UNPARSEABLE (counted corrupt by the store)")
+            continue
+        spec = record["spec"]
+        findings = verify(spec["leaves"], spec["meta"])
+        if findings:
+            bad += 1
+            print(f"{key}: {len(findings)} finding(s)")
+            for f in findings:
+                print(f"  {f}")
+        else:
+            print(f"{key}: ok")
+    print(f"{len(keys)} artifact(s), {bad} failing")
+    return 1 if bad else 0
+
+
+def _cmd_lint(args: argparse.Namespace) -> int:
+    from repro.analysis.lint import lint_sources
+
+    findings = lint_sources(args.src_dir, allowlist=args.allowlist)
+    for f in findings:
+        print(f)
+    print(f"lint: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+def _cmd_audit(args: argparse.Namespace) -> int:
+    from repro.analysis.kernel_audit import audit_kernels
+
+    result = audit_kernels()
+    print("VMEM footprint vs budget (pipelined tiles x2 + scratch):")
+    for rep in result.reports:
+        print(f"  {rep}")
+    print(f"DB ping/pong kernels checked: "
+          f"{', '.join(result.db_kernels_checked) or 'none'}")
+    print(f"steering-table subscripts bounds-checked: "
+          f"{result.subscripts_checked}")
+    for f in result.findings:
+        print(f)
+    print(f"audit: {len(result.findings)} finding(s)")
+    return 1 if result.findings else 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="GUST static analysis: artifact verifier, policy "
+                    "linter, kernel resource/race audit.",
+    )
+    sub = parser.add_subparsers(dest="command", required=True)
+
+    p_verify = sub.add_parser("verify", help="verify every artifact in a "
+                                             "PlanStore directory")
+    p_verify.add_argument("store_dir")
+    p_verify.set_defaults(fn=_cmd_verify)
+
+    p_lint = sub.add_parser("lint", help="policy lint over a source tree")
+    p_lint.add_argument("src_dir", nargs="?", default=None)
+    p_lint.add_argument("--allowlist", default=None)
+    p_lint.set_defaults(fn=_cmd_lint)
+
+    p_audit = sub.add_parser("audit", help="kernel VMEM/race/bounds audit")
+    p_audit.set_defaults(fn=_cmd_audit)
+
+    args = parser.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,281 @@
+"""Policy linter — the repo's written rules as an AST pass (``GUST-Lxx``).
+
+Each rule encodes a policy already stated in ROADMAP.md; the linter makes
+it machine-enforced over ``src/`` (CI runs ``python -m repro.analysis
+lint`` as a hard-failing step):
+
+* **GUST-L01** (Plan API policy): the lazy packages
+  (``repro/__init__.py``, ``repro/analysis/__init__.py``) must not
+  import jax or any ``repro.*`` submodule at module scope — only inside
+  ``if TYPE_CHECKING:`` or function bodies.  ``import repro`` stays
+  jax-free so entry points can pin ``XLA_FLAGS`` first.
+* **GUST-L02** (PR 3 API rule): no *new* public free functions — new
+  execution features hang off ``GustPlan``.  Every public module-level
+  ``def`` must be grandfathered in the allowlist.
+* **GUST-L03** (single decision points): ``resolve_layout`` /
+  ``resolve_gather`` / ``resolve_tuning`` may only be *called* from
+  their sanctioned sites (the allowlist); nothing else re-derives the
+  layout/gather/tuning choice.
+* **GUST-L04** (deprecation policy): no new in-repo call sites of the
+  deprecated spellings ``spmv`` / ``gust_spmm_auto`` /
+  ``SparsityConfig`` — they exist only for downstream callers.
+* **GUST-L05** (store format rule): no ``np.savez`` /
+  ``np.savez_compressed`` — the plan-store container exists because
+  numpy's own format cannot round-trip bfloat16 leaves.
+* **GUST-L06** (store/cache key rule): execution knobs (``workers``,
+  ``backend``, ``pipeline``) must never appear in a cache/store key
+  expression — one artifact serves every execution configuration.
+
+Allowlist format (``lint_allowlist.txt``, same directory)::
+
+    # comment lines and blanks are ignored
+    GUST-L02  repro/core/plan.py::plan        # grandfathered: the front door
+    GUST-L03  repro/core/plan.py::GustPlan.layout
+
+i.e. ``<rule-id>  <path-relative-to-src>::<qualified name>`` with
+``<module>`` as the qualname for module-level statements.  An entry
+silences exactly that rule at exactly that site.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, List, Optional, Set, Tuple
+
+__all__ = ["LintFinding", "lint_sources", "LINT_RULES"]
+
+LINT_RULES: Dict[str, str] = {
+    "GUST-L01": "lazy package imports jax/repro.* at module scope",
+    "GUST-L02": "new public free function (PR 3: features hang off GustPlan)",
+    "GUST-L03": "resolve_* called outside its sanctioned decision point",
+    "GUST-L04": "call site of a deprecated shim spelling",
+    "GUST-L05": "np.savez on artifact paths (bfloat16 cannot round-trip)",
+    "GUST-L06": "execution knob (workers/backend/pipeline) in a cache key",
+}
+
+#: Packages whose module scope must stay jax-free (GUST-L01).
+_LAZY_PACKAGES = ("repro/__init__.py", "repro/analysis/__init__.py")
+
+#: The three single-decision-point functions (GUST-L03).
+_DECISION_POINTS = ("resolve_layout", "resolve_gather", "resolve_tuning")
+
+#: Deprecated spellings whose *call sites* are banned in src/ (GUST-L04).
+_DEPRECATED = ("spmv", "gust_spmm_auto", "SparsityConfig")
+
+#: Execution knobs that must never reach a cache/store key (GUST-L06).
+_EXEC_KNOBS = ("workers", "backend", "pipeline")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    rule: str
+    path: str       # relative to the linted source root
+    line: int
+    qualname: str
+    message: str
+
+    @property
+    def site(self) -> str:
+        return f"{self.path}::{self.qualname}"
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.path}:{self.line} ({self.qualname}): " \
+               f"{self.message}"
+
+
+def _default_allowlist() -> str:
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "lint_allowlist.txt")
+
+
+def load_allowlist(path: Optional[str] = None) -> Set[Tuple[str, str]]:
+    """Parse the allowlist into ``{(rule, site)}`` pairs."""
+    path = path or _default_allowlist()
+    entries: Set[Tuple[str, str]] = set()
+    if not os.path.exists(path):
+        return entries
+    with open(path, encoding="utf-8") as f:
+        for raw in f:
+            line = raw.split("#", 1)[0].strip()
+            if not line:
+                continue
+            parts = line.split(None, 1)
+            if len(parts) != 2:
+                raise ValueError(f"bad allowlist line: {raw.rstrip()!r}")
+            entries.add((parts[0], parts[1].strip()))
+    return entries
+
+
+class _Visitor(ast.NodeVisitor):
+    """One file's pass: tracks the qualname scope stack and whether the
+    current statement sits under ``if TYPE_CHECKING:``."""
+
+    def __init__(self, relpath: str):
+        self.relpath = relpath
+        self.scope: List[str] = []
+        self.type_checking = 0
+        self.findings: List[LintFinding] = []
+
+    # -- helpers ------------------------------------------------------------
+
+    @property
+    def qualname(self) -> str:
+        return ".".join(self.scope) if self.scope else "<module>"
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(LintFinding(
+            rule=rule, path=self.relpath,
+            line=getattr(node, "lineno", 0),
+            qualname=self.qualname, message=message,
+        ))
+
+    # -- scopes -------------------------------------------------------------
+
+    def _visit_scoped(self, node, name: str) -> None:
+        self.scope.append(name)
+        self.generic_visit(node)
+        self.scope.pop()
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._visit_scoped(node, node.name)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        if not self.scope and not node.name.startswith("_"):
+            self.scope.append(node.name)  # site = path::function
+            self._emit("GUST-L02", node,
+                       f"public free function {node.name!r}")
+            self.scope.pop()
+        self._visit_scoped(node, node.name)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_If(self, node: ast.If) -> None:
+        test = node.test
+        is_tc = (isinstance(test, ast.Name) and test.id == "TYPE_CHECKING") \
+            or (isinstance(test, ast.Attribute) and test.attr == "TYPE_CHECKING")
+        if is_tc:
+            self.type_checking += 1
+            for child in node.body:
+                self.visit(child)
+            self.type_checking -= 1
+            for child in node.orelse:
+                self.visit(child)
+        else:
+            self.generic_visit(node)
+
+    # -- GUST-L01 -----------------------------------------------------------
+
+    def _lazy_package(self) -> bool:
+        return self.relpath.replace(os.sep, "/") in _LAZY_PACKAGES
+
+    def _check_eager_import(self, node, module: str) -> None:
+        if not self._lazy_package() or self.scope or self.type_checking:
+            return
+        root = module.split(".", 1)[0]
+        if root in ("jax", "jaxlib", "repro"):
+            self._emit("GUST-L01", node,
+                       f"module-scope import of {module!r} in a lazy package")
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            self._check_eager_import(node, alias.name)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module and node.level == 0:
+            self._check_eager_import(node, node.module)
+        elif node.level:  # relative import inside the lazy package
+            if self._lazy_package() and not self.scope \
+                    and not self.type_checking:
+                self._emit("GUST-L01", node,
+                           "module-scope relative import in a lazy package")
+        self.generic_visit(node)
+
+    # -- calls: GUST-L03 / L04 / L05 ---------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        name = None
+        if isinstance(fn, ast.Name):
+            name = fn.id
+        elif isinstance(fn, ast.Attribute):
+            name = fn.attr
+        if name in _DECISION_POINTS:
+            self._emit("GUST-L03", node,
+                       f"{name}() called here — decision points have "
+                       "sanctioned callers only")
+        if isinstance(fn, ast.Name) and fn.id in _DEPRECATED:
+            self._emit("GUST-L04", node,
+                       f"call to deprecated {fn.id!r}")
+        elif (isinstance(fn, ast.Attribute) and fn.attr in _DEPRECATED
+              and isinstance(fn.value, ast.Name)
+              and fn.value.id == "repro"):
+            self._emit("GUST-L04", node,
+                       f"call to deprecated repro.{fn.attr}")
+        if isinstance(fn, ast.Attribute) \
+                and fn.attr in ("savez", "savez_compressed") \
+                and isinstance(fn.value, ast.Name) \
+                and fn.value.id in ("np", "numpy"):
+            self._emit("GUST-L05", node,
+                       f"np.{fn.attr} cannot round-trip bfloat16 leaves; "
+                       "use the PlanStore container")
+        # GUST-L06: key expression of a .get/.setdefault on a cache-ish
+        # receiver
+        if isinstance(fn, ast.Attribute) \
+                and fn.attr in ("get", "setdefault", "memo") and node.args:
+            self._check_key_expr(node.args[0])
+        self.generic_visit(node)
+
+    # -- GUST-L06 -----------------------------------------------------------
+
+    def _check_key_expr(self, expr: ast.AST) -> None:
+        for sub in ast.walk(expr):
+            knob = None
+            if isinstance(sub, ast.Name) and sub.id in _EXEC_KNOBS:
+                knob = sub.id
+            elif isinstance(sub, ast.Attribute) and sub.attr in _EXEC_KNOBS:
+                knob = sub.attr
+            if knob:
+                self._emit("GUST-L06", sub,
+                           f"execution knob {knob!r} inside a cache-key "
+                           "expression (one artifact serves all execution "
+                           "configs)")
+
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        if isinstance(node.ctx, (ast.Store, ast.Load)):
+            self._check_key_expr(node.slice)
+        self.generic_visit(node)
+
+
+def lint_sources(
+    src_dir: Optional[str] = None,
+    allowlist: Optional[str] = None,
+) -> List[LintFinding]:
+    """Lint every ``.py`` under ``src_dir`` (default: the ``src`` root
+    this package lives in); return non-allowlisted findings."""
+    if src_dir is None:
+        # .../src/repro/analysis/lint.py -> .../src
+        src_dir = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+    allowed = load_allowlist(allowlist)
+    findings: List[LintFinding] = []
+    for root, _dirs, files in os.walk(src_dir):
+        for fname in sorted(files):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(root, fname)
+            rel = os.path.relpath(path, src_dir).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as f:
+                try:
+                    tree = ast.parse(f.read(), filename=path)
+                except SyntaxError as e:
+                    findings.append(LintFinding(
+                        rule="GUST-L00", path=rel, line=e.lineno or 0,
+                        qualname="<module>", message=f"syntax error: {e}"))
+                    continue
+            v = _Visitor(rel)
+            v.visit(tree)
+            findings.extend(v.findings)
+    return [f for f in findings if (f.rule, f.site) not in allowed]

@@ -495,6 +495,15 @@ class GustPlan:
             self._store_put()
         return self._artifact
 
+    def verify(self):
+        """Run the static artifact verifier over the packed leaves and
+        return the list of :class:`~repro.analysis.verify.Finding`
+        violations (empty on a healthy artifact).  Packs a lazy plan;
+        pure numpy, never executes a kernel."""
+        from repro.analysis.verify import verify as _verify
+
+        return _verify(self.artifact)
+
     def _store_put(self) -> None:
         """Best-effort write-behind of the packed artifact (plus tuning
         and a schedule summary for loaded-plan observability).  Never

@@ -89,10 +89,19 @@ class PlanStore:
     ``store_hits`` / ``store_misses``), ``writes``, ``corrupt``
     (unparseable files), ``stale`` (format-version mismatches; a subset
     of misses).
+
+    ``verify="load"`` opts into the static artifact verifier
+    (:func:`repro.analysis.verify.verify`) on every successful parse: an
+    artifact with any ``GUST-Pxx`` finding is treated exactly like an
+    unparseable file — counted in ``corrupt``, read as a miss, never an
+    exception — so a bit-rotted entry is re-packed instead of served.
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, verify: str = "off"):
+        if verify not in ("off", "load"):
+            raise ValueError(f"verify must be 'off' or 'load', got {verify!r}")
         self.path = os.fspath(path)
+        self.verify = verify
         os.makedirs(self.path, exist_ok=True)
         self.hits = 0
         self.misses = 0
@@ -220,6 +229,17 @@ class PlanStore:
             self.corrupt += 1
             self.misses += 1
             return None
+        if self.verify == "load":
+            try:
+                from repro.analysis.verify import verify as _verify
+
+                findings = _verify(leaves, spec["meta"])
+            except Exception:
+                findings = None  # verifier crash != corrupt artifact
+            if findings:
+                self.corrupt += 1
+                self.misses += 1
+                return None
         self.hits += 1
         return {
             "spec": spec,
@@ -228,6 +248,15 @@ class PlanStore:
         }
 
     # -- introspection -------------------------------------------------------
+
+    def keys(self):
+        """Stored keys, sorted — what ``python -m repro.analysis verify``
+        iterates."""
+        return sorted(
+            name[: -len(".gustplan")]
+            for name in os.listdir(self.path)
+            if name.endswith(".gustplan")
+        )
 
     def __contains__(self, key: str) -> bool:
         return os.path.exists(self._file(key))

@@ -71,6 +71,10 @@ class GustServeConfig:
     # PlanStore: warm server starts load packed plans off disk instead of
     # re-paying the edge coloring (the paper's §5.3 amortization extended
     # across process boundaries)
+    store_verify: str = "off"  # "load" runs the static artifact verifier
+    # (repro.analysis) on every store read: a failing artifact is a
+    # counted corrupt miss and gets re-packed — never served, never an
+    # exception
     mats: Tuple[str, ...] = _MLP_MATS
 
     @property
@@ -136,7 +140,7 @@ def gustify(lm: LM, params, cfg: GustServeConfig, *,
             f"(got pattern {[b.kind for b in lm.stack.pattern]})"
         )
     if store is None and cfg.plan_store is not None:
-        store = PlanStore(cfg.plan_store)
+        store = PlanStore(cfg.plan_store, verify=cfg.store_verify)
     mlp_params = params["stack"]["reps"][0]["mlp"]
     reps = lm.stack.reps
     pc = cfg.plan_config

@@ -22,6 +22,8 @@ EXPECTED_EXPORTS = sorted([
     "plan", "reschedule", "GustPlan", "PlanConfig", "PlanCost", "TuneResult",
     # persistent plan artifacts (PR 7)
     "PlanStore",
+    # static analysis (PR 9)
+    "verify", "Finding",
     # SpGEMM + graph analytics (PR 8)
     "SpgemmCost", "pagerank", "triangle_count", "feature_propagation",
     "PageRankResult", "TriangleCountResult",
