@@ -25,15 +25,15 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="", help="comma list: fig7,fig8,fig9,"
                     "table4,bound,roofline,pack,ragged,gather,kernel,sched,"
-                    "serve,spgemm")
+                    "serve,spgemm,chaos")
     args = ap.parse_args(argv)
     scale = 0.12 if args.full else 0.04
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (bound_validation, fig7_designs, fig8_speedup_energy,
-                   fig9_bandwidth, gather_bench, kernel_bench, pack_bench,
-                   ragged_bench, roofline_report, sched_bench, serve_bench,
-                   spgemm_bench, table4_serpens)
+    from . import (bound_validation, chaos_bench, fig7_designs,
+                   fig8_speedup_energy, fig9_bandwidth, gather_bench,
+                   kernel_bench, pack_bench, ragged_bench, roofline_report,
+                   sched_bench, serve_bench, spgemm_bench, table4_serpens)
 
     jobs = [
         ("fig7", lambda: fig7_designs.run(scale=scale)),
@@ -50,6 +50,7 @@ def main(argv=None) -> int:
         ("sched", lambda: sched_bench.main(["--tiny"])),
         ("serve", lambda: serve_bench.main(["--tiny"])),
         ("spgemm", lambda: spgemm_bench.main(["--tiny"])),
+        ("chaos", lambda: chaos_bench.main(["--tiny"])),
     ]
     rc = 0
     for name, fn in jobs:

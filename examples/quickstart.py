@@ -107,6 +107,22 @@ def main():
     print(f"\nverify: {len(findings)} finding(s) "
           f"({'clean' if not findings else findings[0].rule})")
 
+    # 10. chaos: the same plan under deterministic fault injection
+    #     (repro.FaultPlan over the named sites in faults.KNOWN_SITES —
+    #     ROADMAP §Resilience invariants).  A failing local-gather path
+    #     degrades to the resident gather through one decision point,
+    #     counted, bitwise-identical — never an exception.  The full
+    #     fault schedule runs in benchmarks/chaos_bench.py.
+    from repro.resilience.faults import injected
+
+    p_loc = repro.plan(dense, repro.PlanConfig(l=256, gather="local"))
+    chaos = repro.FaultPlan([repro.FaultSpec("gather.local")], seed=0)
+    with injected(chaos):
+        y_chaos = np.asarray(p_loc.spmv(jnp.asarray(v)))
+    print(f"chaos: fired={[f[1] for f in chaos.fired]}, "
+          f"fallbacks={p_loc.cost().fallback_gather}, "
+          f"bitwise={np.array_equal(y_chaos, y_plan)}")
+
 
 if __name__ == "__main__":
     main()

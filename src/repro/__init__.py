@@ -54,6 +54,11 @@ _EXPORTS = {
     "SparsityConfig": "repro.core.gust_linear",
     "prune_by_magnitude": "repro.core.gust_linear",
     "GustServeConfig": "repro.serving.gust_serve",
+    # resilience: fault injection + request lifecycle (PR 10; jax-free)
+    "FaultPlan": "repro.resilience.faults",
+    "FaultSpec": "repro.resilience.faults",
+    "RequestResult": "repro.resilience.lifecycle",
+    "RequestStatus": "repro.resilience.lifecycle",
     # statistical bounds (paper Eqs. 9-11)
     "expected_colors_bound": "repro.core.bounds",
     "expected_execution_cycles": "repro.core.bounds",
@@ -137,4 +142,9 @@ if TYPE_CHECKING:  # static analyzers see the real symbols
         spmv_scheduled,
     )
     from repro.kernels.ops import gust_spmm, gust_spmm_auto  # noqa: F401
+    from repro.resilience.faults import FaultPlan, FaultSpec  # noqa: F401
+    from repro.resilience.lifecycle import (  # noqa: F401
+        RequestResult,
+        RequestStatus,
+    )
     from repro.serving.gust_serve import GustServeConfig  # noqa: F401

@@ -13,9 +13,9 @@ lint`` as a hard-failing step):
   execution features hang off ``GustPlan``.  Every public module-level
   ``def`` must be grandfathered in the allowlist.
 * **GUST-L03** (single decision points): ``resolve_layout`` /
-  ``resolve_gather`` / ``resolve_tuning`` may only be *called* from
-  their sanctioned sites (the allowlist); nothing else re-derives the
-  layout/gather/tuning choice.
+  ``resolve_gather`` / ``resolve_tuning`` / ``resolve_fallback`` may
+  only be *called* from their sanctioned sites (the allowlist); nothing
+  else re-derives the layout/gather/tuning/degradation choice.
 * **GUST-L04** (deprecation policy): no new in-repo call sites of the
   deprecated spellings ``spmv`` / ``gust_spmm_auto`` /
   ``SparsityConfig`` — they exist only for downstream callers.
@@ -25,6 +25,12 @@ lint`` as a hard-failing step):
 * **GUST-L06** (store/cache key rule): execution knobs (``workers``,
   ``backend``, ``pipeline``) must never appear in a cache/store key
   expression — one artifact serves every execution configuration.
+* **GUST-L07** (PR 10 containment rule): on the serving path (serving/,
+  launch/serve.py, core/plan*.py, kernels/ops.py, resilience/), a broad
+  ``except``/``except Exception`` whose body only swallows
+  (``pass``/``...``) is banned outside the sanctioned containment sites
+  in the allowlist — fault handling must retire, count, degrade, or
+  re-raise; silent swallowing is how requests get lost.
 
 Allowlist format (``lint_allowlist.txt``, same directory)::
 
@@ -53,19 +59,33 @@ LINT_RULES: Dict[str, str] = {
     "GUST-L04": "call site of a deprecated shim spelling",
     "GUST-L05": "np.savez on artifact paths (bfloat16 cannot round-trip)",
     "GUST-L06": "execution knob (workers/backend/pipeline) in a cache key",
+    "GUST-L07": "bare except-pass on the serving path (unsanctioned swallow)",
 }
 
 #: Packages whose module scope must stay jax-free (GUST-L01).
 _LAZY_PACKAGES = ("repro/__init__.py", "repro/analysis/__init__.py")
 
-#: The three single-decision-point functions (GUST-L03).
-_DECISION_POINTS = ("resolve_layout", "resolve_gather", "resolve_tuning")
+#: The single-decision-point functions (GUST-L03).
+_DECISION_POINTS = (
+    "resolve_layout", "resolve_gather", "resolve_tuning", "resolve_fallback",
+)
 
 #: Deprecated spellings whose *call sites* are banned in src/ (GUST-L04).
 _DEPRECATED = ("spmv", "gust_spmm_auto", "SparsityConfig")
 
 #: Execution knobs that must never reach a cache/store key (GUST-L06).
 _EXEC_KNOBS = ("workers", "backend", "pipeline")
+
+#: Serving-path prefixes where silent exception swallowing is banned
+#: (GUST-L07): every file a request's tokens flow through.
+_SERVING_PATHS = (
+    "repro/serving/",
+    "repro/launch/serve.py",
+    "repro/core/plan.py",
+    "repro/core/plan_store.py",
+    "repro/kernels/ops.py",
+    "repro/resilience/",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -246,6 +266,35 @@ class _Visitor(ast.NodeVisitor):
     def visit_Subscript(self, node: ast.Subscript) -> None:
         if isinstance(node.ctx, (ast.Store, ast.Load)):
             self._check_key_expr(node.slice)
+        self.generic_visit(node)
+
+    # -- GUST-L07 -----------------------------------------------------------
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        rel = self.relpath.replace(os.sep, "/")
+        on_serving_path = any(
+            rel.startswith(p) if p.endswith("/") else rel == p
+            for p in _SERVING_PATHS
+        )
+        if on_serving_path:
+            broad = node.type is None or (
+                isinstance(node.type, ast.Name)
+                and node.type.id in ("Exception", "BaseException")
+            )
+            swallows = all(
+                isinstance(st, ast.Pass)
+                or (isinstance(st, ast.Expr)
+                    and isinstance(st.value, ast.Constant)
+                    and st.value.value is Ellipsis)
+                for st in node.body
+            )
+            if broad and swallows:
+                self._emit(
+                    "GUST-L07", node,
+                    "broad except that only swallows on the serving path — "
+                    "retire/count/degrade/re-raise, or allowlist the "
+                    "sanctioned containment site",
+                )
         self.generic_visit(node)
 
 

@@ -68,6 +68,8 @@ from .packing import (
     resolve_layout,
     splice_ragged_blocks,
 )
+from repro.resilience import faults
+from repro.resilience.fallback import record_fallback, resolve_fallback
 
 __all__ = [
     "PlanConfig",
@@ -231,6 +233,17 @@ class PlanCost:
     * ``store_hits`` / ``store_misses`` — the plan's attached
       :class:`~repro.core.plan_store.PlanStore` counters (zero when the
       plan was built without ``store=``).
+
+    The resilience block (PR 10) counts graceful-degradation downgrades
+    applied on this plan's execution path, each routed through the
+    single :func:`repro.resilience.resolve_fallback` decision point:
+
+    * ``fallback_kernel`` — Pallas kernel failures retried on the jnp
+      oracle (tolerance-identical);
+    * ``fallback_gather`` — local-gather failures retried resident
+      (bitwise-identical, PR 5);
+    * ``fallback_store`` — store read failures (after jittered-backoff
+      retries) served by a fresh pack (bitwise-identical, PR 7).
     """
 
     cycles: int
@@ -258,6 +271,9 @@ class PlanCost:
     cache_evictions: int = 0
     store_hits: int = 0
     store_misses: int = 0
+    fallback_kernel: int = 0
+    fallback_gather: int = 0
+    fallback_store: int = 0
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -377,9 +393,17 @@ def plan(
     _source = matrix  # kept on the plan so tune() can sweep l
 
     store_key = None
+    store_fallbacks = 0
     if store is not None:
         store_key = store.key(ScheduleCache.matrix_key(matrix), config)
+        io0 = store.io_errors
         record = store.get(store_key)
+        if record is None and store.io_errors > io0:
+            # The read failed even after the store's jittered-backoff
+            # retries: degrade stored -> fresh (bitwise-identical, the
+            # PR 7 warm==cold gate) and count it on the fresh plan.
+            record_fallback("store")
+            store_fallbacks = 1
         if record is not None:
             spec = record["spec"]
             spec = dict(spec, leaves={
@@ -410,6 +434,7 @@ def plan(
     p = GustPlan(config, sched=sched, cache=cache, source=_source)
     p._store = store
     p._store_key = store_key
+    p._fallbacks["store"] = store_fallbacks
     return p
 
 
@@ -455,6 +480,10 @@ class GustPlan:
         self._store_key: Optional[str] = None
         self._store_loaded = False
         self.summary: Optional[Dict] = None
+        # Graceful-degradation counters (PR 10): downgrades applied on
+        # *this plan's* execution path, surfaced as PlanCost.fallback_*.
+        # Keys mirror resilience.fallback's stages.
+        self._fallbacks: Dict[str, int] = {"kernel": 0, "gather": 0, "store": 0}
         # Incremental rescheduling (reschedule()): per-window content
         # fingerprints of the source, and the last delta's stats.
         self._window_hashes: Optional[np.ndarray] = None
@@ -491,6 +520,7 @@ class GustPlan:
         (write-behind) — schedule-only consumers that never pack never
         write either."""
         if self._artifact is None:
+            faults.trip("pack.materialize")
             self._artifact = self._pack()
             self._store_put()
         return self._artifact
@@ -583,24 +613,80 @@ class GustPlan:
         Callers that are batch-major (``GustLinear``, most LM decode
         paths) previously paid two eagerly-materialized ``.T`` copies per
         call; this fast path removes that round-trip bit-identically.
+
+        Execution failures degrade through the single fallback decision
+        point (:func:`repro.resilience.resolve_fallback`, ROADMAP
+        §Resilience invariants): a failing ``gather="local"`` path
+        retries resident (bitwise-identical, PR 5), then a failing
+        Pallas backend retries the jnp oracle (tolerance-identical).
+        Every applied downgrade is counted on ``cost().fallback_*``; a
+        failure at the floor of the chain propagates to the serve-step
+        containment layer.
         """
         if self.mesh is not None:
             raise NotImplementedError(
                 "sharded plans execute single vectors; use .spmv(v) "
                 "(the §5.5 row-window split concatenates per-device outputs)"
             )
+        try:
+            return self._execute(
+                x, transpose_io, self.config.gather, self._use_kernel()
+            )
+        except Exception as err:
+            return self._degraded_spmm(x, transpose_io, err)
+
+    def _execute(
+        self, x, transpose_io: bool, gather: str, use_kernel: bool
+    ) -> jnp.ndarray:
         from repro.kernels.ops import execute_spmm
 
         return execute_spmm(
             self.artifact,
             x,
-            use_kernel=self._use_kernel(),
+            use_kernel=use_kernel,
             interpret=self._interpret(),
             c_blk=self.config.c_blk,
             transpose_io=transpose_io,
-            gather=self.config.gather,
+            gather=gather,
             pipeline=self.config.pipeline,
         )
+
+    def _degraded_spmm(
+        self, x, transpose_io: bool, err: BaseException
+    ) -> jnp.ndarray:
+        """Sanctioned containment site for :meth:`spmm` (lint GUST-L07
+        allowlist): walk the fallback chain one step at a time, counting
+        each applied downgrade, and re-raise the original error when the
+        chain is exhausted."""
+        gather = self.config.gather
+        if gather == "auto":
+            a = self._artifact  # spmm already materialized it, or packing
+            if a is None:  # itself failed -> nothing to degrade to
+                raise err
+            gather = resolve_gather(a.s_blk, a.seg_count)
+        use_kernel = self._use_kernel()
+
+        degraded_gather = resolve_fallback("gather", gather)
+        if degraded_gather is not None:
+            try:
+                y = self._execute(x, transpose_io, degraded_gather, use_kernel)
+            except Exception:
+                pass  # fall through to the kernel leg with gather degraded
+            else:
+                record_fallback("gather")
+                self._fallbacks["gather"] += 1
+                return y
+            gather = degraded_gather
+
+        if use_kernel and resolve_fallback("kernel", "pallas") == "jnp":
+            y = self._execute(x, transpose_io, gather, False)
+            record_fallback("kernel")
+            self._fallbacks["kernel"] += 1
+            if degraded_gather is not None:
+                record_fallback("gather")
+                self._fallbacks["gather"] += 1
+            return y
+        raise err
 
     def spmv(self, v: jnp.ndarray) -> jnp.ndarray:
         """Single-vector execution: ``v (n,) -> y (m,)``.  On a sharded
@@ -1052,6 +1138,9 @@ class GustPlan:
             pipeline=self._pipeline(),
             store_hits=self._store.hits if self._store is not None else 0,
             store_misses=self._store.misses if self._store is not None else 0,
+            fallback_kernel=self._fallbacks["kernel"],
+            fallback_gather=self._fallbacks["gather"],
+            fallback_store=self._fallbacks["store"],
             **{
                 f"cache_{k}": v
                 for k, v in (

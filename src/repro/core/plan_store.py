@@ -22,11 +22,22 @@ Keying and versioning rules (ROADMAP §Scheduler + plan-store invariants):
 * Every file carries :data:`FORMAT_VERSION`; a version mismatch is a
   clean miss (counted in ``stale``), never an error — old files are
   simply re-written by the next warm-up.
-* Writes are atomic (``os.replace`` of a same-directory temp file), so a
-  crashed writer can leave a stray temp file but never a torn artifact.
+* Writes are atomic **and durable** (``fsync`` of the same-directory
+  temp file before ``os.replace``), so a crashed writer — or a host that
+  loses power between write and rename — can leave a stray temp file
+  but never a torn artifact at the final path.
 * Loads are corruption-tolerant: *any* failure to parse (truncated file,
   bad magic, undecodable header, short array bytes) counts in
   ``corrupt`` and reads as a miss.
+* Loads are I/O-fault-tolerant: transient ``OSError`` during the file
+  read is retried with jittered exponential backoff
+  (:func:`repro.resilience.retrying`); exhausted retries count in
+  ``io_errors`` and read as a miss — the caller re-packs fresh
+  (``stored → fresh`` fallback), never raises on the serving path.
+* Fault-injection sites (``store.get``, ``store.get.corrupt``,
+  ``store.put``, ``store.put.crash`` — ROADMAP §Resilience invariants)
+  are threaded through ``get``/``put``; with no ``FaultPlan`` installed
+  each is a single module-global check.
 
 File format (one plan per file, ``<key>.gustplan``)::
 
@@ -49,6 +60,9 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.resilience import faults
+from repro.resilience.retry import retrying
 
 __all__ = ["PlanStore", "ARTIFACT_KNOBS", "FORMAT_VERSION"]
 
@@ -88,7 +102,9 @@ class PlanStore:
     Counters: ``hits`` / ``misses`` (surfaced on ``GustPlan.cost()`` as
     ``store_hits`` / ``store_misses``), ``writes``, ``corrupt``
     (unparseable files), ``stale`` (format-version mismatches; a subset
-    of misses).
+    of misses), ``io_errors`` (reads that exhausted their retry budget;
+    also a subset of misses), ``io_retries`` (transient read attempts
+    that were retried).
 
     ``verify="load"`` opts into the static artifact verifier
     (:func:`repro.analysis.verify.verify`) on every successful parse: an
@@ -97,17 +113,30 @@ class PlanStore:
     exception — so a bit-rotted entry is re-packed instead of served.
     """
 
-    def __init__(self, path: str, verify: str = "off"):
+    def __init__(
+        self,
+        path: str,
+        verify: str = "off",
+        *,
+        read_retries: int = 2,
+        retry_base_s: float = 0.01,
+        retry_budget_s: float = 2.0,
+    ):
         if verify not in ("off", "load"):
             raise ValueError(f"verify must be 'off' or 'load', got {verify!r}")
         self.path = os.fspath(path)
         self.verify = verify
+        self.read_retries = read_retries
+        self.retry_base_s = retry_base_s
+        self.retry_budget_s = retry_budget_s
         os.makedirs(self.path, exist_ok=True)
         self.hits = 0
         self.misses = 0
         self.writes = 0
         self.corrupt = 0
         self.stale = 0
+        self.io_errors = 0
+        self.io_retries = 0
 
     # -- keying --------------------------------------------------------------
 
@@ -140,8 +169,12 @@ class PlanStore:
         summary: Optional[Dict] = None,
     ) -> str:
         """Persist a ``GustPlan.to_spec()`` dict (plus optional JSON-able
-        ``tuning`` / ``summary`` sidecars) under ``key``.  Atomic: readers
-        only ever see complete files."""
+        ``tuning`` / ``summary`` sidecars) under ``key``.  Atomic and
+        durable: the temp file is fsync'd before the rename, so readers
+        only ever see complete files — even across a crash mid-write,
+        which leaves at most a stray ``.tmp.*`` file (cleaned up here),
+        never a torn ``.gustplan``."""
+        faults.trip("store.put", tag=key)
         arrays = []
         chunks = []
         offset = 0
@@ -180,6 +213,12 @@ class PlanStore:
                 f.write(header)
                 for raw in chunks:
                     f.write(raw)
+                # Simulated crash point: data written but not yet durable.
+                # A real crash here must never surface a torn final file —
+                # the fsync + rename ordering below guarantees it.
+                faults.trip("store.put.crash", tag=key)
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, path)
         finally:
             if os.path.exists(tmp):
@@ -199,8 +238,21 @@ class PlanStore:
             self.misses += 1
             return None
         try:
-            with open(path, "rb") as f:
-                blob = f.read()
+            blob = self._read_blob(key, path)
+        except Exception:
+            # Transient I/O exhausted its backoff budget: a counted clean
+            # miss — the caller re-packs fresh (stored -> fresh fallback).
+            self.io_errors += 1
+            self.misses += 1
+            return None
+        try:
+            spec = faults.trip("store.get.corrupt", tag=key)
+            if spec is not None and blob:
+                # Deterministic header corruption (a payload flip could
+                # parse silently): must land as a counted corrupt miss.
+                torn = bytearray(blob)
+                torn[0] ^= 0xFF
+                blob = bytes(torn)
             if blob[: len(_MAGIC)] != _MAGIC:
                 raise ValueError("bad magic")
             hlen_at = len(_MAGIC)
@@ -247,6 +299,31 @@ class PlanStore:
             "summary": header.get("summary"),
         }
 
+    def _read_blob(self, key: str, path: str) -> bytes:
+        """Read the raw container bytes, retrying transient I/O errors
+        with jittered exponential backoff (bounded by
+        ``retry_budget_s``).  Each attempt passes through the
+        ``store.get`` fault site, so an injected ``times=N`` OSError
+        proves the first ``N`` attempts fail and the ``N+1``-th serves."""
+
+        def attempt():
+            faults.trip("store.get", tag=key)
+            with open(path, "rb") as f:
+                return f.read()
+
+        def count_retry(_attempt, _err):
+            self.io_retries += 1
+
+        return retrying(
+            attempt,
+            max_retries=self.read_retries,
+            retry_on=(OSError, faults.FaultError),
+            on_retry=count_retry,
+            base_delay=self.retry_base_s,
+            max_elapsed=self.retry_budget_s,
+            seed=0,
+        )()
+
     # -- introspection -------------------------------------------------------
 
     def keys(self):
@@ -273,6 +350,8 @@ class PlanStore:
             "writes": self.writes,
             "corrupt": self.corrupt,
             "stale": self.stale,
+            "io_errors": self.io_errors,
+            "io_retries": self.io_retries,
             "entries": len(self),
         }
 

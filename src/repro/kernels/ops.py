@@ -33,6 +33,7 @@ from repro.core.packing import (
     packed_spec,
     resolve_gather,
 )
+from repro.resilience import faults
 
 from .gust_spmv import (
     make_gust_spmv,
@@ -118,12 +119,58 @@ def _scale2d(packed) -> jnp.ndarray:
     return jnp.asarray(packed.scale_blk, jnp.float32).reshape(-1, 1)
 
 
+def execute_spmm(
+    packed: Union[PackedSchedule, RaggedSchedule],
+    x: jnp.ndarray,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = True,
+    c_blk: int = 8,
+    transpose_io: bool = False,
+    gather: str = "auto",
+    pipeline: str = "auto",
+    backend: str = None,
+    layout: str = "auto",
+) -> jnp.ndarray:
+    """``y = M @ x`` — host-side dispatch wrapper around the jitted
+    executor core.
+
+    The wrapper exists so the resilience fault sites (``kernel.execute``
+    tagged with the effective backend, and ``gather.local`` when the
+    resolved Buffer-Filler mode is local — ROADMAP §Resilience
+    invariants) fire on every *call*, not once per trace: a Python-level
+    trip inside the jitted body would only ever fire at trace time.
+    With no FaultPlan installed the extra cost is one module-global
+    check; all math, validation, and dispatch live in the core (see its
+    docstring for the knob semantics)."""
+    if faults.enabled():
+        eff_kernel = use_kernel if backend is None else backend == "pallas"
+        faults.trip("kernel.execute", tag="pallas" if eff_kernel else "jnp")
+        eff_gather = gather
+        if eff_gather == "auto":
+            eff_gather = resolve_gather(packed.s_blk, packed.seg_count)
+        if eff_gather == "local":
+            faults.trip("gather.local")
+    return _execute_spmm_impl(
+        packed,
+        x,
+        use_kernel=use_kernel,
+        interpret=interpret,
+        c_blk=c_blk,
+        transpose_io=transpose_io,
+        gather=gather,
+        pipeline=pipeline,
+        backend=backend,
+        layout=layout,
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("use_kernel", "interpret", "c_blk", "transpose_io",
                      "gather", "pipeline", "backend", "layout"),
 )
-def execute_spmm(
+def _execute_spmm_impl(
     packed: Union[PackedSchedule, RaggedSchedule],
     x: jnp.ndarray,
     *,

@@ -56,6 +56,8 @@ def run_serving(
     temperature: float = 0.0,
     eos_id=None,
     seed: int = 0,
+    deadline_steps: int = None,
+    deadline_s: float = None,
 ):
     cfg = get_arch(arch)
     if reduced:
@@ -70,7 +72,9 @@ def run_serving(
         )
     sc = ServeConfig(batch=batch, seq_len=seq_len, dtype="float32", gust=gcfg,
                      temperature=temperature, eos_id=eos_id,
-                     queue_capacity=max(requests, 64))
+                     queue_capacity=max(requests, 64),
+                     max_steps_per_request=deadline_steps,
+                     max_seconds_per_request=deadline_s)
     loop = ServeLoop(lm, params, sc, seed=seed)
     rng = np.random.default_rng(seed)
     # mixed-length trace: prompt lengths cycle between prompt_len//2 and
@@ -90,7 +94,14 @@ def run_serving(
     else:  # continuous batching: enqueue the stream, drain the queue
         rids = [loop.enqueue(prompt, max_new=max_new) for prompt in prompts]
         loop.run_to_completion()
-        done = {rid: loop.completed[rid] for rid in rids}
+        # non-DONE requests (TIMEOUT under a deadline, SHED past
+        # capacity) carry their terminal result instead of completed[]
+        done = {
+            rid: loop.completed.get(
+                rid, loop.results[rid].tokens if rid in loop.results else []
+            )
+            for rid in rids
+        }
     dt = time.time() - t0
     toks = sum(len(v) for v in done.values())
     stats = {
@@ -102,6 +113,9 @@ def run_serving(
         "slot_occupancy": round(loop.occupancy, 4),
         "mode": "serial" if serial else "continuous",
         "gust": bool(gust),
+        # lifecycle + degradation counters (PR 10): terminal statuses
+        # and the process-wide fallback counters
+        "resilience": loop.resilience_stats(),
     }
     if gust and loop.gust_tree is not None:
         # per-matrix entries only — "plan_store" is the store's counter dict
@@ -148,6 +162,11 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--eos-id", type=int, default=None,
                     help="retire a request when it samples this token")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="per-request decode-step budget; expiry retires "
+                    "the request with status=TIMEOUT (tokens kept)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock budget in seconds")
     args = ap.parse_args()
     _, stats = run_serving(
         args.arch, batch=args.batch, seq_len=args.seq_len,
@@ -157,6 +176,7 @@ def main():
         ragged=args.ragged, compact=args.compact,
         plan_store=args.plan_store, serial=args.serial,
         temperature=args.temperature, eos_id=args.eos_id,
+        deadline_steps=args.deadline_steps, deadline_s=args.deadline_s,
     )
     print(json.dumps(stats))
 

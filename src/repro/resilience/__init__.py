@@ -1,0 +1,56 @@
+"""``repro.resilience`` — fault injection, retry, lifecycle, fallback.
+
+Deliberately jax-free (like ``repro.analysis``): the store, the serving
+loop's control plane, and CI tooling import from here without pulling
+the accelerator stack.  Three legs (ROADMAP §Resilience invariants):
+
+* :mod:`.faults`    — deterministic seeded fault injection over named
+                      sites (``FaultPlan`` / ``FaultSpec`` / ``trip``).
+* :mod:`.retry`     — jittered-exponential-backoff bounded retry
+                      (``training.fault_tolerance.retrying`` re-exports
+                      this).
+* :mod:`.lifecycle` — ``RequestStatus`` / ``RequestResult``: every
+                      request terminates with a definite status.
+* :mod:`.fallback`  — the single ``resolve_fallback`` decision point
+                      plus process-wide downgrade counters.
+"""
+
+from repro.resilience.faults import (  # noqa: F401
+    KNOWN_SITES,
+    FaultError,
+    FaultPlan,
+    FaultSpec,
+    clear,
+    enabled,
+    injected,
+    install,
+    trip,
+)
+from repro.resilience.fallback import (  # noqa: F401
+    fallback_counters,
+    record_fallback,
+    reset_fallback_counters,
+    resolve_fallback,
+)
+from repro.resilience.lifecycle import RequestResult, RequestStatus  # noqa: F401
+from repro.resilience.retry import backoff_schedule, retrying  # noqa: F401
+
+__all__ = [
+    "FaultError",
+    "FaultPlan",
+    "FaultSpec",
+    "KNOWN_SITES",
+    "trip",
+    "install",
+    "clear",
+    "injected",
+    "enabled",
+    "retrying",
+    "backoff_schedule",
+    "RequestStatus",
+    "RequestResult",
+    "resolve_fallback",
+    "record_fallback",
+    "fallback_counters",
+    "reset_fallback_counters",
+]

@@ -45,6 +45,7 @@ from repro.core.plan_store import PlanStore
 from repro.models import transformer as T
 from repro.models.layers import apply_norm
 from repro.models.model_zoo import LM
+from repro.resilience.fallback import fallback_counters
 
 __all__ = ["GustServeConfig", "gustify", "decode_step_gust", "dryrun_specs"]
 
@@ -145,6 +146,7 @@ def gustify(lm: LM, params, cfg: GustServeConfig, *,
     reps = lm.stack.reps
     pc = cfg.plan_config
     out: Dict = {"mats": {}, "stats": {}}
+    fb0 = dict(fallback_counters)  # attribute downgrades to this build
     for name in cfg.mats:
         w_stack = np.asarray(mlp_params[name])  # (R, d_in, d_out)
         # one plan per layer, through the content-keyed cache: re-gustifying
@@ -175,6 +177,11 @@ def gustify(lm: LM, params, cfg: GustServeConfig, *,
         }
     if store is not None:
         out["stats"]["plan_store"] = store.stats()
+    fb = {k: v - fb0[k] for k, v in fallback_counters.items() if v - fb0[k]}
+    if fb:
+        # degradations applied while building (e.g. stored -> fresh on a
+        # failing store read): counted, surfaced, never an exception
+        out["stats"]["fallbacks"] = fb
     return out
 
 

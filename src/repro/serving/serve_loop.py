@@ -15,10 +15,28 @@ dry-run lowers); ``ServeLoop`` is the host-side driver implementing
     sampling under ``jax.random``; per-(request, token) keys make a
     request's sampled continuation independent of what else is
     co-scheduled in the batch.
-  * **Bounded admission queue** — ``enqueue`` parks requests up to
-    ``ServeConfig.queue_capacity``; ``step`` admits into free slots and
-    retires sequences on EOS or ``max_new``, so the loop drains a request
-    stream without manual slot management.
+  * **Bounded admission queue with counted load-shed** — ``enqueue``
+    parks requests up to ``ServeConfig.queue_capacity``; at capacity the
+    newest request is rejected with a structured
+    :class:`~repro.resilience.RequestResult` (``status=SHED``, counted
+    in ``stats``), never an exception.  ``step`` admits into free slots
+    and retires sequences on EOS or ``max_new``, so the loop drains a
+    request stream without manual slot management.
+
+Request lifecycle hardening (PR 10, ROADMAP §Resilience invariants):
+every request the loop ever sees terminates with exactly one
+``RequestResult`` in ``results`` carrying a definite status —
+DONE / FAILED / TIMEOUT / SHED / CANCELLED.  Per-request deadlines
+(decode-step and wall budgets) retire cleanly as TIMEOUT; ``cancel``
+retires as CANCELLED; and ``step`` contains faults at three levels:
+an admission fault retires only that request FAILED, a batched-decode
+fault leaves ALL state untouched (the identical step is retried next
+call — decode is a pure function of (caches, toks, pos), so the retry
+is bitwise; a consecutive-failure budget retires the active set FAILED
+instead of spinning), and a per-slot retirement fault retires only that
+slot's request.  The chaos gate (``benchmarks/chaos_bench.py``) holds
+the PR 4 slot-isolation contract under fire: surviving requests' token
+streams are bitwise equal to a fault-free run.
 
 Per-request outputs are bit-identical to a solo run of the same request
 (locked by tests/test_serving.py): decode compute is row-independent and
@@ -29,6 +47,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
@@ -36,10 +55,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model_zoo import LM
+from repro.resilience import faults
+from repro.resilience.fallback import fallback_counters
+from repro.resilience.lifecycle import RequestResult, RequestStatus
 
 from .gust_serve import GustServeConfig, decode_step_gust, gustify
 
-__all__ = ["ServeConfig", "make_serve_fns", "make_sampler", "ServeLoop"]
+__all__ = [
+    "ServeConfig",
+    "make_serve_fns",
+    "make_sampler",
+    "ServeLoop",
+    "RequestResult",
+    "RequestStatus",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,8 +78,16 @@ class ServeConfig:
     dtype: str = "bfloat16"
     temperature: float = 0.0  # 0 = greedy
     eos_id: Optional[int] = None  # retire a slot when it samples this token
-    queue_capacity: int = 64  # bounded admission queue (enqueue raises when full)
+    queue_capacity: int = 64  # bounded admission queue (full -> counted SHED)
     gust: Optional[GustServeConfig] = None  # None = dense decode
+    # default per-request deadlines (enqueue/submit may override per
+    # request); None = unbounded.  max_steps_per_request counts decode
+    # steps while admitted; max_seconds_per_request is a wall budget.
+    max_steps_per_request: Optional[int] = None
+    max_seconds_per_request: Optional[float] = None
+    # consecutive contained decode-step failures tolerated before the
+    # active set is retired FAILED instead of retrying forever
+    max_step_failures: int = 8
 
     @property
     def jnp_dtype(self):
@@ -126,6 +163,10 @@ class _Slot:
     pos: int = 0
     generated: Optional[List[int]] = None
     max_new: int = 0
+    steps: int = 0  # decode steps taken while this request held the slot
+    deadline_steps: Optional[int] = None
+    deadline_s: Optional[float] = None
+    admitted_t: float = 0.0
 
 
 class ServeLoop:
@@ -161,39 +202,141 @@ class ServeLoop:
         self.slots = [_Slot() for _ in range(cfg.batch)]
         self._base_key = jax.random.PRNGKey(seed)
         self._next_id = 0
-        self.pending: Deque[Tuple[int, np.ndarray, int]] = collections.deque()
+        self.pending: Deque[Tuple] = collections.deque()
         self.completed: Dict[int, List[int]] = {}
-        self.stats = {"decode_steps": 0, "active_slot_steps": 0, "prefills": 0}
+        self.results: Dict[int, RequestResult] = {}
+        self._decode_failures = 0  # consecutive contained step failures
+        self.stats = {
+            "decode_steps": 0, "active_slot_steps": 0, "prefills": 0,
+            "done": 0, "failed": 0, "timeouts": 0, "shed": 0,
+            "cancelled": 0, "decode_retries": 0,
+        }
+
+    # -- lifecycle bookkeeping ---------------------------------------------
+    def _retire(
+        self,
+        rid: int,
+        status: RequestStatus,
+        tokens: Optional[List[int]] = None,
+        *,
+        reason: str = "",
+        steps: int = 0,
+    ) -> RequestResult:
+        """Record the one terminal result for ``rid`` (first status
+        wins) and bump its status counter; DONE additionally lands in
+        ``completed`` for back-compat."""
+        if rid in self.results:
+            return self.results[rid]
+        res = RequestResult(rid, status, list(tokens or []), reason, steps)
+        self.results[rid] = res
+        key = {
+            RequestStatus.DONE: "done",
+            RequestStatus.FAILED: "failed",
+            RequestStatus.TIMEOUT: "timeouts",
+            RequestStatus.SHED: "shed",
+            RequestStatus.CANCELLED: "cancelled",
+        }[status]
+        self.stats[key] = self.stats.get(key, 0) + 1
+        if status is RequestStatus.DONE:
+            self.completed[rid] = res.tokens
+        return res
 
     # -- admission ---------------------------------------------------------
-    def enqueue(self, prompt: np.ndarray, max_new: int) -> int:
-        """Park one request in the bounded admission queue.  Returns id."""
-        if len(self.pending) >= self.cfg.queue_capacity:
-            raise RuntimeError(
-                f"admission queue full (capacity {self.cfg.queue_capacity})"
-            )
+    def enqueue(
+        self,
+        prompt: np.ndarray,
+        max_new: int,
+        *,
+        deadline_steps: Optional[int] = None,
+        deadline_s: Optional[float] = None,
+    ) -> int:
+        """Park one request in the bounded admission queue.  Returns id.
+
+        At ``queue_capacity`` the request is load-shed (reject-newest
+        backpressure): it still gets an id, but terminates immediately
+        with a counted ``status=SHED`` result instead of ever being
+        admitted — structured rejection, not an exception, so a bursty
+        client can't crash the serving path."""
         rid = self._next_id
         self._next_id += 1
-        self.pending.append((rid, np.asarray(prompt, np.int32), int(max_new)))
+        if len(self.pending) >= self.cfg.queue_capacity:
+            self._retire(
+                rid, RequestStatus.SHED,
+                reason=f"admission queue full (capacity {self.cfg.queue_capacity})",
+            )
+            return rid
+        self.pending.append((
+            rid, np.asarray(prompt, np.int32), int(max_new),
+            deadline_steps, deadline_s,
+        ))
         return rid
 
-    def submit(self, prompt: np.ndarray, max_new: int) -> int:
-        """Admit one request into a free slot NOW; runs its prefill."""
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new: int,
+        *,
+        deadline_steps: Optional[int] = None,
+        deadline_s: Optional[float] = None,
+    ) -> int:
+        """Admit one request into a free slot NOW; runs its prefill.
+        Still raises when no slot is free (an immediate-admission caller
+        wants the error); an admission *fault* retires the request
+        FAILED instead of propagating."""
         free = [i for i, s in enumerate(self.slots) if not s.active]
         if not free:
             raise RuntimeError("no free slots")
         rid = self._next_id
         self._next_id += 1
-        self._admit(free[0], rid, np.asarray(prompt, np.int32), int(max_new))
+        try:
+            self._admit(
+                free[0], rid, np.asarray(prompt, np.int32), int(max_new),
+                deadline_steps, deadline_s,
+            )
+        except Exception as err:  # contained: only this request fails
+            self._retire(
+                rid, RequestStatus.FAILED, reason=f"admission failed: {err!r}"
+            )
         return rid
 
-    def _admit(self, i: int, rid: int, prompt: np.ndarray, max_new: int):
+    def cancel(self, rid: int) -> bool:
+        """Explicitly cancel a pending or active request.  Retires it
+        with ``status=CANCELLED`` (keeping any tokens generated so far)
+        and frees its slot; returns False when ``rid`` is unknown or
+        already terminal."""
+        if rid in self.results:
+            return False
+        for entry in self.pending:
+            if entry[0] == rid:
+                self.pending.remove(entry)
+                self._retire(rid, RequestStatus.CANCELLED, reason="cancelled while queued")
+                return True
+        for i, s in enumerate(self.slots):
+            if s.active and s.request_id == rid:
+                self._retire(
+                    rid, RequestStatus.CANCELLED, s.generated,
+                    reason="cancelled while active", steps=s.steps,
+                )
+                self.slots[i] = _Slot()
+                return True
+        return False
+
+    def _admit(
+        self,
+        i: int,
+        rid: int,
+        prompt: np.ndarray,
+        max_new: int,
+        deadline_steps: Optional[int] = None,
+        deadline_s: Optional[float] = None,
+    ):
         """Per-slot prefill: batch-1 prompt pass + slot-local cache insert.
 
         The prefill jit keys on the exact prompt length, so each distinct
         length in the stream compiles once (exact-length prefill is what
         keeps admission bit-identical to a solo run; length bucketing
         needs masked prefill — see ROADMAP open items)."""
+        faults.trip("serve.admit", tag=str(rid))
         logits, one = self._prefill(
             self.params,
             {"tokens": jnp.asarray(prompt)[None]},
@@ -202,17 +345,38 @@ class ServeLoop:
         self.caches = self._insert(self.caches, one, i)
         first = int(self._sample_rows(logits[:, -1], [(rid, 0)])[0])
         self.stats["prefills"] += 1
-        slot = _Slot(True, rid, int(prompt.shape[0]), [first], max_new)
+        slot = _Slot(
+            True, rid, int(prompt.shape[0]), [first], max_new,
+            deadline_steps=(
+                deadline_steps if deadline_steps is not None
+                else self.cfg.max_steps_per_request
+            ),
+            deadline_s=(
+                deadline_s if deadline_s is not None
+                else self.cfg.max_seconds_per_request
+            ),
+            admitted_t=time.monotonic(),
+        )
         if self._finished(slot, first):
-            self.completed[rid] = slot.generated
+            self._retire(rid, RequestStatus.DONE, slot.generated)
         else:
             self.slots[i] = slot
 
     def _admit_from_queue(self):
         free = [i for i, s in enumerate(self.slots) if not s.active]
         while free and self.pending:
-            rid, prompt, max_new = self.pending.popleft()
-            self._admit(free.pop(0), rid, prompt, max_new)
+            rid, prompt, max_new, dl_steps, dl_s = self.pending.popleft()
+            try:
+                self._admit(free.pop(0), rid, prompt, max_new, dl_steps, dl_s)
+            except Exception as err:
+                # Contained: a faulted admission retires ONLY this
+                # request (the slot was never activated, and a partial
+                # batch-1 cache insert into an inactive row cannot
+                # influence other rows' decode — attention is per-row).
+                self._retire(
+                    rid, RequestStatus.FAILED,
+                    reason=f"admission failed: {err!r}",
+                )
             # _admit may complete the request instantly (EOS/max_new=1),
             # leaving the slot free — recompute instead of assuming
             free = [i for i, s in enumerate(self.slots) if not s.active]
@@ -232,10 +396,41 @@ class ServeLoop:
         return len(slot.generated) >= slot.max_new + 1
 
     # -- decode ------------------------------------------------------------
+    def _expire_deadlines(self):
+        """Retire every active slot whose decode-step or wall budget has
+        expired: clean TIMEOUT with the tokens generated so far."""
+        now = time.monotonic()
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            over_steps = s.deadline_steps is not None and s.steps >= s.deadline_steps
+            over_wall = s.deadline_s is not None and now - s.admitted_t >= s.deadline_s
+            if over_steps or over_wall:
+                why = (
+                    f"step budget {s.deadline_steps} exhausted" if over_steps
+                    else f"wall budget {s.deadline_s}s exhausted"
+                )
+                self._retire(
+                    s.request_id, RequestStatus.TIMEOUT, s.generated,
+                    reason=why, steps=s.steps,
+                )
+                self.slots[i] = _Slot()
+
     def step(self) -> int:
         """Admit from the queue, then one decode step for all active
-        slots (each at its own position); returns #active after retirement."""
+        slots (each at its own position); returns #active after retirement.
+
+        No exception escapes: admission faults retire one request
+        (``_admit_from_queue``), and a batched decode/sample fault is
+        contained HERE with all state untouched — ``self.caches`` is
+        only rebound after both succeed, and decode is a pure function
+        of (caches, toks, pos), so the retried step next call is bitwise
+        identical to the one that faulted.  After
+        ``cfg.max_step_failures`` consecutive contained failures the
+        active set retires FAILED (definite status) instead of spinning.
+        """
         self._admit_from_queue()
+        self._expire_deadlines()
         active = [i for i, s in enumerate(self.slots) if s.active]
         if not active:
             return 0
@@ -244,27 +439,60 @@ class ServeLoop:
         for i in active:
             toks[i, 0] = self.slots[i].generated[-1]
             pos[i] = self.slots[i].pos
-        logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(toks), jnp.asarray(pos)
-        )
-        sampled = self._sample_rows(
-            logits[:, 0],
-            [
-                # inactive rows sample garbage that is discarded; any
-                # non-negative key seed works (fold_in is uint32)
-                (s.request_id, len(s.generated)) if s.active else (0, 0)
-                for s in self.slots
-            ],
-        )
+        try:
+            faults.trip("serve.decode")
+            logits, new_caches = self._decode(
+                self.params, self.caches, jnp.asarray(toks), jnp.asarray(pos)
+            )
+            sampled = self._sample_rows(
+                logits[:, 0],
+                [
+                    # inactive rows sample garbage that is discarded; any
+                    # non-negative key seed works (fold_in is uint32)
+                    (s.request_id, len(s.generated)) if s.active else (0, 0)
+                    for s in self.slots
+                ],
+            )
+        except Exception as err:  # sanctioned containment (GUST-L07 site)
+            self.stats["decode_retries"] = self.stats.get("decode_retries", 0) + 1
+            self._decode_failures += 1
+            if self._decode_failures >= self.cfg.max_step_failures:
+                for i in active:
+                    s = self.slots[i]
+                    self._retire(
+                        s.request_id, RequestStatus.FAILED, s.generated,
+                        reason=(
+                            f"decode failed {self._decode_failures} "
+                            f"consecutive steps: {err!r}"
+                        ),
+                        steps=s.steps,
+                    )
+                    self.slots[i] = _Slot()
+                self._decode_failures = 0
+            return len([s for s in self.slots if s.active])
+        self._decode_failures = 0
+        self.caches = new_caches
         self.stats["decode_steps"] += 1
         self.stats["active_slot_steps"] += len(active)
         for i in active:
             s = self.slots[i]
-            tok = int(sampled[i])
-            s.generated.append(tok)
-            s.pos += 1
-            if self._finished(s, tok):
-                self.completed[s.request_id] = s.generated
+            try:
+                faults.trip("serve.slot", tag=str(s.request_id))
+                tok = int(sampled[i])
+                s.generated.append(tok)
+                s.pos += 1
+                s.steps += 1
+                if self._finished(s, tok):
+                    self._retire(
+                        s.request_id, RequestStatus.DONE, s.generated,
+                        steps=s.steps,
+                    )
+                    self.slots[i] = _Slot()
+            except Exception as err:  # contained: one slot, one request
+                self._retire(
+                    s.request_id, RequestStatus.FAILED, s.generated,
+                    reason=f"slot fault: {err!r}", steps=s.steps,
+                )
                 self.slots[i] = _Slot()
         return len([s for s in self.slots if s.active])
 
@@ -276,8 +504,26 @@ class ServeLoop:
             return 0.0
         return self.stats["active_slot_steps"] / (steps * self.cfg.batch)
 
+    def resilience_stats(self) -> Dict[str, int]:
+        """Lifecycle + degradation counters in one snapshot: terminal
+        statuses, contained decode retries, and the process-wide
+        fallback counters (``repro.resilience.fallback_counters``) —
+        what ``launch/serve.py`` and the chaos benchmark report."""
+        out = {
+            k: self.stats.get(k, 0)
+            for k in (
+                "done", "failed", "timeouts", "shed", "cancelled",
+                "decode_retries",
+            )
+        }
+        out.update({f"fallback_{k}": v for k, v in fallback_counters.items()})
+        return out
+
     def run_to_completion(self, max_steps: int = 10_000):
-        """Drain the admission queue and every active slot."""
+        """Drain the admission queue and every active slot.  Bounded:
+        with per-request deadlines and the consecutive-failure budget,
+        every admitted request reaches a terminal status in finitely
+        many steps even under persistent faults."""
         for _ in range(max_steps):
             if self.step() == 0 and not self.pending:
                 return

@@ -50,31 +50,12 @@ class CheckpointPolicy:
             shutil.rmtree(_step_dir(ckpt_dir, s), ignore_errors=True)
 
 
-def retrying(
-    fn: Callable,
-    *,
-    max_retries: int = 3,
-    retry_on=(RuntimeError,),
-    on_retry: Optional[Callable[[int, BaseException], None]] = None,
-):
-    """Wrap a step function with bounded retry.  The caller re-supplies the
-    last known-good state on each attempt, so a retry is semantically a
-    restart-from-checkpoint."""
-
-    def wrapped(*args, **kwargs):
-        err: Optional[BaseException] = None
-        for attempt in range(max_retries + 1):
-            try:
-                return fn(*args, **kwargs)
-            except retry_on as e:  # transient: retry from caller's state
-                err = e
-                if on_retry:
-                    on_retry(attempt, e)
-        raise RuntimeError(
-            f"step failed after {max_retries} retries: {err!r}"
-        ) from err
-
-    return wrapped
+# Bounded retry moved to the jax-free resilience layer (PR 10) so the
+# store and serving paths share the same jittered-backoff policy; this
+# re-export keeps every training call site unchanged.  Defaults are
+# backward-compatible: base_delay=0 means no sleeping, same attempt
+# count, same terminal RuntimeError.
+from repro.resilience.retry import retrying  # noqa: E402,F401
 
 
 class StragglerMonitor:

@@ -3,6 +3,7 @@ only launch/dryrun.py (and the subprocess-based SPMD tests) use the
 512/8-device placeholder worlds."""
 
 import os
+import signal
 import subprocess
 import sys
 
@@ -11,6 +12,34 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+
+#: Per-test wall-clock budget (seconds).  A wedged test — e.g. a fault
+#: test spinning on a retry loop — fails loudly instead of hanging CI.
+#: SIGALRM-based because the container has no pytest-timeout plugin;
+#: override with REPRO_TEST_TIMEOUT (0 disables).
+TEST_TIMEOUT_S = int(os.environ.get("REPRO_TEST_TIMEOUT", "600"))
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    # hookwrapper (not wrapper=True) style for pytest>=7.4 compatibility
+    if TEST_TIMEOUT_S <= 0 or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+
+    def on_timeout(signum, frame):
+        raise TimeoutError(
+            f"test exceeded the global {TEST_TIMEOUT_S}s timeout "
+            "(REPRO_TEST_TIMEOUT to override)"
+        )
+
+    prev = signal.signal(signal.SIGALRM, on_timeout)
+    signal.alarm(TEST_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, prev)
 
 
 @pytest.fixture(scope="session")

@@ -415,6 +415,39 @@ def test_lint_rules_fire(tmp_path):
                      "GUST-L05", "GUST-L06"]
 
 
+def test_lint_l07_bare_except_pass_on_serving_path(tmp_path):
+    swallow = (
+        "def _risky():\n"
+        "    try:\n"
+        "        pass\n"
+        "    except Exception:\n"
+        "        pass\n"
+    )
+    findings = _lint_tmp({"repro/serving/loop.py": swallow}, tmp_path)
+    assert [f.rule for f in findings] == ["GUST-L07"]
+    assert findings[0].qualname == "_risky"
+    # the same swallow off the serving path is not L07's business
+    assert _lint_tmp({"repro/graph/x.py": swallow}, tmp_path / "b") == []
+    # a handler that *does* something (count, retire, degrade) is fine
+    handled = (
+        "def _contained():\n"
+        "    try:\n"
+        "        pass\n"
+        "    except Exception as err:\n"
+        "        record(err)\n"
+    )
+    assert _lint_tmp({"repro/serving/ok.py": handled}, tmp_path / "c") == []
+    # narrow except-pass is equally fine: L07 targets broad swallows only
+    narrow = (
+        "def _narrow():\n"
+        "    try:\n"
+        "        pass\n"
+        "    except KeyError:\n"
+        "        pass\n"
+    )
+    assert _lint_tmp({"repro/serving/nrw.py": narrow}, tmp_path / "d") == []
+
+
 def test_lint_type_checking_import_allowed(tmp_path):
     findings = _lint_tmp({
         "repro/__init__.py": (

@@ -34,6 +34,8 @@ EXPECTED_EXPORTS = sorted([
     "PackedSchedule", "RaggedSchedule", "ScheduleCache", "clear_cache",
     # sparse LM serving
     "GustLinear", "SparsityConfig", "prune_by_magnitude", "GustServeConfig",
+    # resilience: fault injection + request lifecycle (PR 10)
+    "FaultPlan", "FaultSpec", "RequestResult", "RequestStatus",
     # statistical bounds
     "expected_colors_bound", "expected_execution_cycles",
     "expected_utilization",

@@ -208,15 +208,18 @@ def test_gust_mixed_length_concurrent_matches_solo(dense_lm):
 
 def test_queue_admission_drains_stream(dense_lm):
     """Bounded admission queue: more requests than slots drain through
-    step() with no manual slot management; capacity overflow raises."""
+    step() with no manual slot management; capacity overflow load-sheds
+    the newest request as a structured SHED result, not an exception."""
     lm, params = dense_lm
     sc = ServeConfig(batch=2, seq_len=64, dtype="float32", queue_capacity=6)
     loop = ServeLoop(lm, params, sc)
     rng = np.random.default_rng(0)
     rids = [loop.enqueue(rng.integers(0, lm.cfg.vocab, 3 + r).astype(np.int32),
                          max_new=3) for r in range(6)]
-    with pytest.raises(RuntimeError, match="queue full"):
-        loop.enqueue(np.arange(4, dtype=np.int32), max_new=1)
+    shed_rid = loop.enqueue(np.arange(4, dtype=np.int32), max_new=1)
+    shed = loop.results[shed_rid]
+    assert shed.status.name == "SHED" and "queue full" in shed.reason
+    assert loop.stats["shed"] == 1
     loop.run_to_completion()
     assert not loop.pending
     assert sorted(loop.completed) == sorted(rids)
